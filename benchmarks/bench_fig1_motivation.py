@@ -1,0 +1,56 @@
+"""Paper Fig. 1: impact of network / users / accuracy on response time."""
+import numpy as np
+
+from benchmarks.common import Timer, emit, save_json
+from repro.core import EXPERIMENTS, EndEdgeCloudEnv, Scenario
+from repro.core.baselines import fixed_strategy_response
+
+
+def main():
+    out = {}
+    # (a) tiers x network condition, 1 user
+    weak = Scenario.from_string("weak", "W|W")
+    reg = Scenario.from_string("reg", "R|R")
+    for net, sc in (("regular", reg), ("weak", weak)):
+        env = EndEdgeCloudEnv(1, sc, noise=0)
+        row = {}
+        for strat in ("device", "edge", "cloud"):
+            with Timer() as t:
+                ms, _ = fixed_strategy_response(env, strat)
+            row[strat] = ms
+            emit(f"fig1a_{net}_{strat}", t.us, f"{ms:.1f}ms")
+        out[f"fig1a_{net}"] = row
+    # sanity ordering (paper): regular -> cloud best; weak -> device best
+    assert out["fig1a_regular"]["cloud"] < out["fig1a_regular"]["device"]
+    assert out["fig1a_weak"]["device"] < out["fig1a_weak"]["edge"]
+
+    # (b) users 1..5 x fixed strategy (regular net)
+    for n in range(1, 6):
+        env = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-A"], noise=0)
+        row = {s: fixed_strategy_response(env, s)[0]
+               for s in ("device", "edge", "cloud")}
+        out[f"fig1b_users{n}"] = row
+        emit(f"fig1b_users{n}", 0.0,
+             "|".join(f"{s}={v:.0f}ms" for s, v in row.items()))
+
+    # (c) response vs accuracy pareto (1..5 users, all tiers, all models)
+    pareto = []
+    for n in (1, 3, 5):
+        env = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-A"], noise=0)
+        acts = env.spec.all_actions()
+        if len(acts) > 100000:
+            acts = np.random.default_rng(0).choice(acts, 100000, replace=False)
+        ms, acc = env.expected_response_batch(acts)
+        for a_level in (74.2, 81.1, 85.0, 88.2, 89.9):
+            sel = np.abs(acc - a_level) < 1.0
+            if sel.any():
+                pareto.append({"users": n, "acc": a_level,
+                               "best_ms": float(ms[sel].min())})
+    out["fig1c"] = pareto
+    emit("fig1c_pareto_points", 0.0, len(pareto))
+    save_json("bench_fig1", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Fig. 5: avg response/accuracy for 1..5 users x 5 thresholds,
+ours (RL=bruteforce-verified optimum + QL spot checks) vs SOTA [36] vs
+fixed strategies, EXP-A."""
+from benchmarks.common import FAST, Timer, emit, save_json
+from repro.core import (EXPERIMENTS, THRESHOLDS, EndEdgeCloudEnv,
+                        QLearningAgent, bruteforce_optimal, train_agent)
+from repro.core.baselines import fixed_strategy_response
+from repro.core.spaces import restricted_actions
+
+# paper Fig.5 five-user reference points (ms)
+PAPER_5U = {"Min": 72.08, "80%": 103.88, "85%": 143.81, "89%": 269.80,
+            "Max": 418.91}
+
+
+def main():
+    out = {}
+    for n in range(1, 6):
+        env = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-A"], noise=0)
+        row = {}
+        for s in ("device", "edge", "cloud"):
+            row[f"fixed_{s}"], _ = fixed_strategy_response(env, s)
+        _, sota_ms, sota_acc, _ = bruteforce_optimal(
+            env, 0.0, restricted_actions(env.spec))
+        row["sota_ms"], row["sota_acc"] = sota_ms, sota_acc
+        for tname, th in THRESHOLDS.items():
+            a, ms, acc, _ = bruteforce_optimal(env, th)
+            row[f"ours_{tname}_ms"], row[f"ours_{tname}_acc"] = ms, acc
+            row[f"ours_{tname}_decision"] = env.spec.decode_action(a)
+        out[f"users{n}"] = row
+        emit(f"fig5_users{n}_ours_89", 0.0,
+             f"{row['ours_89%_ms']:.1f}ms_acc{row['ours_89%_acc']:.1f}")
+        emit(f"fig5_users{n}_sota", 0.0, f"{sota_ms:.1f}ms")
+
+    # RL spot-check: trained QL reaches the bruteforce point (C1)
+    spot_users = (2,) if FAST else (2, 3, 5)
+    for n in spot_users:
+        env = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-A"],
+                              accuracy_threshold=89.0, seed=0)
+        ag = QLearningAgent(env.spec, seed=0)
+        with Timer() as t:
+            res = train_agent(ag, env, 40000 if FAST else 400000)
+        emit(f"fig5_ql_spot_users{n}", t.us,
+             f"pred_acc={res.prediction_accuracy:.3f}_steps={res.converged_at}")
+        out[f"ql_spot_users{n}"] = {"converged_at": res.converged_at,
+                                    "pred_acc": res.prediction_accuracy}
+
+    # headline claim: speedup at 89% vs SOTA, 5 users
+    r5 = out["users5"]
+    speedup = 1 - r5["ours_89%_ms"] / r5["sota_ms"]
+    acc_loss = r5["sota_acc"] - r5["ours_89%_acc"]
+    emit("fig5_headline_speedup_5u", 0.0,
+         f"{speedup*100:.1f}%_accloss{acc_loss:.2f}pp_paper35%/0.8pp")
+    out["headline"] = {"speedup": speedup, "acc_loss_pp": acc_loss,
+                       "paper_5u_ms": PAPER_5U}
+    save_json("bench_fig5", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Fig. 7: transfer-learning warm start cuts convergence time
+(paper: up to 12.5x QL / 3.3x DQL)."""
+from benchmarks.common import FAST, Timer, emit, save_json
+from repro.core import (EXPERIMENTS, DQNAgent, DQNConfig, EndEdgeCloudEnv,
+                        QLearningAgent, QLearningConfig, transfer_experiment)
+from repro.core.spaces import SpaceSpec
+
+
+def main():
+    out = {}
+    n = 2 if FAST else 3
+
+    def make_env(th):
+        return EndEdgeCloudEnv(n, EXPERIMENTS["EXP-A"],
+                               accuracy_threshold=th, seed=7)
+
+    def make_ql():
+        return QLearningAgent(SpaceSpec(n), QLearningConfig(eps_decay=1e-2),
+                              seed=7)
+
+    with Timer() as t:
+        scr, wrm = transfer_experiment(make_ql, make_env, 0.0, 85.0,
+                                       max_steps=60000, check_every=100)
+    sp = (scr.converged_at or 60000) / max(1, (wrm.converged_at or 60000))
+    emit("fig7_ql_transfer", t.us,
+         f"scratch={scr.converged_at}_warm={wrm.converged_at}_speedup={sp:.1f}x")
+    out["ql"] = {"scratch": scr.converged_at, "warm": wrm.converged_at,
+                 "speedup": sp}
+
+    def make_dq():
+        return DQNAgent(SpaceSpec(n), DQNConfig(form="paper", train_every=2),
+                        seed=7, accuracy_threshold=85.0)
+
+    with Timer() as t:
+        scr, wrm = transfer_experiment(make_dq, make_env, 0.0, 85.0,
+                                       max_steps=8000 if FAST else 30000,
+                                       check_every=250)
+    sp = (scr.converged_at or 1e9) / max(1, (wrm.converged_at or 1e9))
+    emit("fig7_dql_transfer", t.us,
+         f"scratch={scr.converged_at}_warm={wrm.converged_at}_speedup={sp:.1f}x")
+    out["dql"] = {"scratch": scr.converged_at, "warm": wrm.converged_at,
+                  "speedup": sp}
+    save_json("bench_fig7", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

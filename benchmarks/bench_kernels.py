@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks: interpret-mode Pallas vs jnp oracle (CPU
+wall time is NOT the TPU target — correctness + structural cost only)
+plus analytic FLOP counts per call."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, emit, save_json
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    out = {}
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+
+    b, s, h, kv, hd = 1, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    flops = 4 * b * h * s * s * hd
+    us_k = _time(ops.flash_attention, q, k, v, causal=True)
+    us_r = _time(ops.flash_attention, q, k, v, causal=True, impl="ref")
+    emit("kernel_flash_attn_512", us_k, f"{flops/1e6:.0f}MFLOP_ref{us_r:.0f}us")
+    out["flash"] = {"us_pallas_interpret": us_k, "us_ref": us_r, "flops": flops}
+
+    bq, hq, kvq, hdq, sq = 4, 16, 4, 128, 2048
+    qq = jax.random.normal(ks[0], (bq, hq, hdq), jnp.float32)
+    kc = jax.random.normal(ks[1], (bq, sq, kvq, hdq), jnp.float32)
+    vc = jax.random.normal(ks[2], (bq, sq, kvq, hdq), jnp.float32)
+    kv_pos = jnp.tile(jnp.arange(sq)[None], (bq, 1))
+    cur = jnp.full((bq,), sq - 1)
+    us_k = _time(ops.decode_attention, qq, kc, vc, kv_pos, cur)
+    us_r = _time(ops.decode_attention, qq, kc, vc, kv_pos, cur, impl="ref")
+    emit("kernel_decode_attn_2k", us_k, f"ref{us_r:.0f}us")
+    out["decode"] = {"us_pallas_interpret": us_k, "us_ref": us_r}
+
+    m, kk, n = 512, 512, 512
+    x = jax.random.normal(ks[0], (m, kk))
+    w = jax.random.normal(ks[1], (kk, n))
+    xq, sx = ref.quantize_ref(x)
+    wq, sw = ref.quantize_ref(w, axis=0)
+    us_k = _time(ops.int8_matmul, xq, sx, wq, sw)
+    us_r = _time(ops.int8_matmul, xq, sx, wq, sw, impl="ref")
+    emit("kernel_int8_matmul_512", us_k,
+         f"{2*m*kk*n/1e6:.0f}MFLOP_ref{us_r:.0f}us")
+    out["int8"] = {"us_pallas_interpret": us_k, "us_ref": us_r}
+
+    bt, st, di, nn = 1, 256, 128, 16
+    u = jax.random.normal(ks[0], (bt, st, di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, st, di))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (di, nn)) * 0.3)
+    B = jax.random.normal(ks[3], (bt, st, nn))
+    C = jax.random.normal(ks[4], (bt, st, nn))
+    D = jnp.ones((di,))
+    us_k = _time(ops.selective_scan, u, dt, A, B, C, D)
+    us_r = _time(ops.selective_scan, u, dt, A, B, C, D, impl="ref")
+    emit("kernel_selective_scan_256", us_k, f"ref{us_r:.0f}us")
+    out["scan"] = {"us_pallas_interpret": us_k, "us_ref": us_r}
+
+    save_json("bench_kernels", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

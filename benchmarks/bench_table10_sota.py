@@ -1,0 +1,25 @@
+"""Paper Table 10: the SOTA [36] baseline's decisions (CO-only, d0) per
+experiment, 5 users."""
+from benchmarks.common import emit, save_json
+from repro.core import EXPERIMENTS, EndEdgeCloudEnv, bruteforce_optimal
+from repro.core.spaces import restricted_actions
+
+PAPER = {"EXP-A": 418.91, "EXP-B": 472.88, "EXP-C": 464.59, "EXP-D": 506.62}
+
+
+def main():
+    out = {}
+    for exp, sc in EXPERIMENTS.items():
+        env = EndEdgeCloudEnv(5, sc, noise=0)
+        a, ms, acc, _ = bruteforce_optimal(env, 0.0,
+                                           restricted_actions(env.spec))
+        out[exp] = {"decision": env.spec.decode_action(a), "ms": ms,
+                    "acc": acc, "paper_ms": PAPER[exp]}
+        emit(f"table10_{exp}", 0.0,
+             f"{ms:.1f}ms|paper{PAPER[exp]:.1f}|acc{acc:.1f}")
+    save_json("bench_table10", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

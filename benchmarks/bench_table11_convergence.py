@@ -1,0 +1,61 @@
+"""Paper Table 11 + Fig. 6: convergence steps for Q-Learning vs Deep
+Q-Learning vs SOTA [36] vs brute-force, per user count and threshold.
+
+fast mode: N in {2,3}; full mode: N in {3,4,5} with paper-scale budgets.
+"""
+from benchmarks.common import FAST, Timer, emit, save_json
+from repro.core import (EXPERIMENTS, THRESHOLDS, DQNAgent, DQNConfig,
+                        EndEdgeCloudEnv, QLearningAgent,
+                        bruteforce_complexity, make_sota_agent, train_agent)
+
+PAPER_N5 = {"QL": 1.05e6, "DQL": 6.5e4, "SOTA": 2.5e4, "BF": 4.2e12}
+
+
+def main():
+    out = {}
+    users = (2, 3) if FAST else (3, 4, 5)
+    thresholds = ("Min", "85%", "Max") if FAST else tuple(THRESHOLDS)
+    budget = {2: 30000, 3: 60000, 4: 150000, 5: 400000}
+    for n in users:
+        for tname in thresholds:
+            th = THRESHOLDS[tname]
+            env = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-A"],
+                                  accuracy_threshold=th, seed=0)
+            ql = QLearningAgent(env.spec, seed=0)
+            with Timer() as t:
+                r_ql = train_agent(ql, env, budget[n], check_every=200)
+            emit(f"table11_QL_{n}u_{tname}", t.us,
+                 f"steps={r_ql.converged_at}_pred={r_ql.prediction_accuracy:.2f}")
+
+            env = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-A"],
+                                  accuracy_threshold=th, seed=0)
+            form = "paper" if n <= 3 else "factored"
+            dq = DQNAgent(env.spec, DQNConfig(form=form, train_every=2),
+                          seed=0, accuracy_threshold=th)
+            dq_budget = min(budget[n], 20000 if FAST else 80000)
+            with Timer() as t:
+                r_dq = train_agent(dq, env, dq_budget, check_every=500)
+            emit(f"table11_DQL{form[0]}_{n}u_{tname}", t.us,
+                 f"steps={r_dq.converged_at}_pred={r_dq.prediction_accuracy:.2f}")
+
+            out[f"{n}u_{tname}"] = {
+                "QL_steps": r_ql.converged_at, "QL_pred": r_ql.prediction_accuracy,
+                "DQL_steps": r_dq.converged_at, "DQL_pred": r_dq.prediction_accuracy,
+                "DQL_form": form,
+                "bruteforce_pairs": bruteforce_complexity(n)}
+        # SOTA converges faster (smaller space) — Max threshold only
+        env = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-A"],
+                              accuracy_threshold=0.0, seed=0)
+        sota = make_sota_agent(env.spec, seed=0)
+        with Timer() as t:
+            r_s = train_agent(sota, env, budget[n], check_every=200)
+        emit(f"table11_SOTA_{n}u", t.us, f"steps={r_s.converged_at}")
+        out[f"{n}u_SOTA"] = r_s.converged_at
+        emit(f"table11_bruteforce_{n}u", 0.0,
+             f"{bruteforce_complexity(n):.1e}_pairs")
+    save_json("bench_table11", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

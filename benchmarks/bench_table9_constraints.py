@@ -1,0 +1,44 @@
+"""Paper Table 9: decisions + avg response/accuracy per threshold per
+experiment (5 users)."""
+from benchmarks.common import emit, save_json
+from repro.core import (EXPERIMENTS, THRESHOLDS, EndEdgeCloudEnv,
+                        bruteforce_optimal)
+
+PAPER = {  # (avg ms, avg acc) Table 9
+    ("EXP-A", "Min"): (72.08, 72.80), ("EXP-A", "80%"): (103.88, 81.11),
+    ("EXP-A", "85%"): (143.81, 85.06), ("EXP-A", "89%"): (269.80, 89.10),
+    ("EXP-A", "Max"): (418.91, 89.90),
+    ("EXP-B", "Min"): (106.76, 72.80), ("EXP-B", "80%"): (139.92, 83.23),
+    ("EXP-B", "85%"): (176.21, 85.05), ("EXP-B", "89%"): (303.50, 89.10),
+    ("EXP-B", "Max"): (472.88, 89.90),
+    ("EXP-C", "Min"): (119.28, 72.80), ("EXP-C", "80%"): (149.52, 81.11),
+    ("EXP-C", "85%"): (190.76, 85.47), ("EXP-C", "89%"): (318.45, 89.10),
+    ("EXP-C", "Max"): (464.59, 89.90),
+    ("EXP-D", "Min"): (158.53, 72.80), ("EXP-D", "80%"): (182.53, 81.12),
+    ("EXP-D", "85%"): (225.32, 85.06), ("EXP-D", "89%"): (356.75, 89.10),
+    ("EXP-D", "Max"): (506.62, 89.90),
+}
+
+
+def main():
+    out = {}
+    worst_rel = 0.0
+    for exp, sc in EXPERIMENTS.items():
+        env = EndEdgeCloudEnv(5, sc, noise=0)
+        for tname, th in THRESHOLDS.items():
+            a, ms, acc, _ = bruteforce_optimal(env, th)
+            p_ms, p_acc = PAPER[(exp, tname)]
+            rel = abs(ms - p_ms) / p_ms
+            worst_rel = max(worst_rel, rel) if tname != "Max" else worst_rel
+            out[f"{exp}_{tname}"] = {
+                "decision": env.spec.decode_action(a), "ms": ms, "acc": acc,
+                "paper_ms": p_ms, "paper_acc": p_acc, "rel_err": rel}
+            emit(f"table9_{exp}_{tname}", 0.0,
+                 f"{ms:.1f}ms/{acc:.1f}%|paper{p_ms:.1f}/{p_acc:.1f}|rel{rel*100:.0f}%")
+    emit("table9_worst_rel_err_nonmax", 0.0, f"{worst_rel*100:.1f}%")
+    save_json("bench_table9", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

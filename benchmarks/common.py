@@ -1,0 +1,41 @@
+"""Shared benchmark helpers.
+
+REPRO_BENCH_MODE=fast (default) caps RL step budgets so the whole suite
+finishes in minutes on CPU; =full uses paper-scale budgets (Table 11).
+"""
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+FAST = os.environ.get("REPRO_BENCH_MODE", "fast") != "full"
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT",
+                             os.path.join(os.path.dirname(__file__), "..",
+                                          "results"))
+
+
+def emit(name: str, us_per_call: float, derived):
+    """One CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def save_json(name: str, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+    @property
+    def us(self):
+        return self.seconds * 1e6

@@ -1,0 +1,108 @@
+"""Roofline report (deliverable g): reads results/dryrun.jsonl and emits
+results/roofline.md — per (arch x shape x mesh): the three roofline terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, per-device memory, and
+a one-line "what would move the dominant term" note.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--jsonl results/dryrun.jsonl]
+"""
+import argparse
+import json
+import os
+from collections import OrderedDict
+
+NOTES = {
+    ("compute",): "raise MXU utilization: larger fused matmul tiles / "
+                  "fewer small ops; already near roofline if useful~1",
+    ("memory", "train"): "cut HBM traffic: tighter remat policy, fused "
+                         "attention (flash) instead of materialized scores, "
+                         "smaller loss chunks",
+    ("memory", "decode"): "decode is cache-bandwidth-bound by nature: "
+                          "donate cache buffers (in-place update), int8/kv "
+                          "quantization, GQA already minimizes KV reads",
+    ("memory", "prefill"): "fuse attention (flash kernel) and keep "
+                           "activations bf16; avoid cache copies",
+    ("collective",): "reshard: move FSDP gathers off the critical path "
+                     "(overlap), all-to-all instead of all-gather for MoE "
+                     "dispatch, reduce-scatter gradients",
+}
+
+
+def note_for(row):
+    dom = row["dominant"]
+    return NOTES.get((dom, row["kind"]), NOTES.get((dom,), ""))
+
+
+def load(path):
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            # keep the LAST result for each combo (reruns supersede)
+            rows[(r["arch"], r["shape"], r.get("mesh", "?"))] = r
+    return rows
+
+
+def fmt_table(rows, mesh):
+    fitproof = mesh != "16x16"   # the multi-pod pass skips the unrolled
+    # cost compile: it proves the 'pod' axis shards (lower+compile+fit);
+    # roofline terms are single-pod per the spec.
+    out = []
+    hdr = f"### mesh {mesh}"
+    if fitproof:
+        hdr += (" — compile/fit proof only (roofline terms are single-pod;"
+                " this pass compiles the runtime scan program)")
+    out.append(hdr + "\n")
+    if fitproof:
+        out.append("| arch | shape | compiled | temp/dev | args/dev |")
+        out.append("|---|---|---|---|---|")
+    else:
+        out.append("| arch | shape | compute | memory | collective | dominant "
+                   "| useful | temp/dev | fits 16G | note |")
+        out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, m), r in sorted(rows.items()):
+        if m != mesh:
+            continue
+        if not r.get("ok"):
+            out.append(f"| {arch} | {shape} | FAIL | "
+                       f"{r.get('error', '')[:60]} | |")
+            continue
+        temp = (r.get("temp_bytes_per_device") or 0) / 2**30
+        arg = (r.get("arg_bytes_per_device") or 0) / 2**30
+        if fitproof:
+            out.append(f"| {arch} | {shape} | OK | {temp:.1f}G | {arg:.1f}G |")
+            continue
+        fits = "Y" if (temp + arg) <= 16.0 else f"N({temp+arg:.0f}G)"
+        out.append(
+            f"| {arch} | {shape} "
+            f"| {r['compute_s']*1e3:.1f} ms "
+            f"| {r['memory_s']*1e3:.1f} ms "
+            f"| {r['collective_s']*1e3:.1f} ms "
+            f"| {r['dominant']} "
+            f"| {min(r['useful_flops_ratio'], 99):.2f} "
+            f"| {temp:.1f}G "
+            f"| {fits} "
+            f"| {note_for(r)[:58]} |")
+    return "\n".join(out) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="results/dryrun.jsonl")
+    ap.add_argument("--out", default="results/roofline.md")
+    args = ap.parse_args()
+    rows = load(args.jsonl)
+    parts = ["# Roofline table (per device per step; v5e constants)\n"]
+    for mesh in ("16x16", "2x16x16"):
+        if any(m == mesh for (_, _, m) in rows):
+            parts.append(fmt_table(rows, mesh))
+    n_ok = sum(1 for r in rows.values() if r.get("ok"))
+    parts.append(f"\n{n_ok}/{len(rows)} combos lowered+compiled OK.\n")
+    txt = "\n".join(parts)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(txt)
+    print(txt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark runner: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows (see common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,table11]
+  REPRO_BENCH_MODE=full for paper-scale RL budgets.
+"""
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_adaptation, bench_fig1_motivation,
+                        bench_fig5_user_variability, bench_fig7_transfer,
+                        bench_kernels, bench_overhead,
+                        bench_table8_decisions, bench_table9_constraints,
+                        bench_table10_sota, bench_table11_convergence)
+
+SUITES = {
+    "fig1": bench_fig1_motivation,
+    "fig5": bench_fig5_user_variability,
+    "table8": bench_table8_decisions,
+    "table9": bench_table9_constraints,
+    "table10": bench_table10_sota,
+    "table11": bench_table11_convergence,
+    "fig7": bench_fig7_transfer,
+    "overhead": bench_overhead,
+    "kernels": bench_kernels,
+    "adaptation": bench_adaptation,   # beyond-paper: mid-run network shift
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for name in names:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            SUITES[name].main()
+        except Exception as e:  # noqa
+            import traceback
+            traceback.print_exc()
+            failures.append((name, e))
+    print(f"# done in {time.time()-t0:.0f}s; failures: "
+          f"{[n for n, _ in failures] or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Minimal dry-run example: lower ONE (arch x shape) onto the production
+mesh and print its roofline terms — the building block of deliverable (g).
+
+  PYTHONPATH=src python examples/dryrun_single.py --arch gemma3-4b --shape decode_32k
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+if __name__ == "__main__":
+    from repro.launch import dryrun
+    sys.exit(dryrun.main())

@@ -1,0 +1,64 @@
+"""Train the paper's RL orchestration agents (Q-Learning + Deep
+Q-Learning) on the calibrated end-edge-cloud environment, reproduce the
+convergence-to-optimal claim, and compare against SOTA [36] and fixed
+strategies.
+
+  PYTHONPATH=src python examples/train_rl_agent.py [--users 3]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (EXPERIMENTS, THRESHOLDS, DQNAgent, DQNConfig,
+                        EndEdgeCloudEnv, QLearningAgent, bruteforce_optimal,
+                        fixed_strategy_response, make_sota_agent, train_agent)
+from repro.core.spaces import restricted_actions
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", type=int, default=3)
+    ap.add_argument("--threshold", default="85%")
+    ap.add_argument("--steps", type=int, default=40000)
+    args = ap.parse_args()
+    th = THRESHOLDS[args.threshold]
+
+    env = EndEdgeCloudEnv(args.users, EXPERIMENTS["EXP-A"],
+                          accuracy_threshold=th, seed=0)
+    print(f"== {args.users} users, threshold {args.threshold} ==")
+    for s in ("device", "edge", "cloud"):
+        ms, acc = fixed_strategy_response(env, s)
+        print(f"fixed {s:6s}: {ms:7.1f} ms (acc {acc:.1f}%)")
+    _, sota_ms, _, _ = bruteforce_optimal(env, 0.0,
+                                          restricted_actions(env.spec))
+    print(f"SOTA[36] optimum (CO-only): {sota_ms:7.1f} ms")
+    a, opt_ms, opt_acc, n = bruteforce_optimal(env, th)
+    print(f"bruteforce optimum ({n} actions): {opt_ms:7.1f} ms "
+          f"acc {opt_acc:.1f}% -> {env.spec.decode_action(a)}")
+
+    print("\ntraining Q-Learning (Alg. 1)...")
+    ql = QLearningAgent(env.spec, seed=0)
+    res = train_agent(ql, env, args.steps, check_every=200, log_every=5000)
+    print(f"  converged at step {res.converged_at}; greedy "
+          f"{res.greedy_ms:.1f} ms; prediction accuracy "
+          f"{res.prediction_accuracy*100:.0f}%")
+
+    print("\ntraining Deep Q-Learning (Alg. 2, replay buffer)...")
+    form = "paper" if args.users <= 3 else "factored"
+    env = EndEdgeCloudEnv(args.users, EXPERIMENTS["EXP-A"],
+                          accuracy_threshold=th, seed=1)
+    dq = DQNAgent(env.spec, DQNConfig(form=form, train_every=2), seed=1,
+                  accuracy_threshold=th)
+    res = train_agent(dq, env, min(args.steps, 20000), check_every=500)
+    print(f"  converged at step {res.converged_at}; greedy "
+          f"{res.greedy_ms:.1f} ms; prediction accuracy "
+          f"{res.prediction_accuracy*100:.0f}%")
+
+    print(f"\nspeedup vs SOTA at {args.threshold}: "
+          f"{(1 - opt_ms / sota_ms) * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Minimal npz+json pytree checkpointing (params, optimizer state, RL
+agents). Leaves are saved flattened with their tree paths as keys;
+non-native dtypes (bfloat16) are stored as uint16 bit patterns with the
+true dtype recorded in the json sidecar."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_BITCAST = {"bfloat16": np.uint16}
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_pytree(path: str, tree):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, _ = _flatten(tree)
+    dtypes, stored = {}, {}
+    for k, v in flat.items():
+        dtypes[k] = str(v.dtype)
+        if str(v.dtype) in _BITCAST:
+            v = v.view(_BITCAST[str(v.dtype)])
+        stored[k] = v
+    np.savez(path + ".npz", **stored)
+    with open(path + ".json", "w") as f:
+        json.dump(dtypes, f)
+
+
+def load_pytree(path: str, like):
+    """Restore into the structure of ``like`` (shapes must match)."""
+    data = np.load(path + ".npz")
+    with open(path + ".json") as f:
+        dtypes = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        arr = data[key]
+        want = dtypes[key]
+        if want in _BITCAST:
+            arr = arr.view(getattr(ml_dtypes, want))
+        leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,3 @@
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, InputShape, ModelConfig,
+                                MoEConfig, SSMConfig, get_config, list_archs,
+                                reduced, scale_width)

@@ -1,0 +1,37 @@
+"""The paper's own benchmark family, adapted (DESIGN.md SS2).
+
+The paper serves MobileNetV1 at 8 operating points d0..d7 =
+{width 1.0, 0.75, 0.5, 0.25} x {FP32, Int8} (Table 4). Our serving
+substrate is a decoder transformer, so the ladder is realized as a small
+transformer scaled by the same width multipliers x {bf16, int8}; the
+Table-4 MACs and Top-1/Top-5 accuracies are retained as calibrated
+metadata driving the orchestration environment (core/env.py).
+"""
+from repro.configs.base import ModelConfig, scale_width
+
+CONFIG = ModelConfig(
+    name="edge-ladder", arch_type="dense",
+    n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+    d_ff=1024, vocab_size=8192,
+    mlp_act="swiglu",
+    citation="MobileNetV1 ladder, arXiv:1704.04861 Table 4 of the paper",
+)
+
+# Paper Table 4: (million MACs, dtype, top1, top5) for d0..d7.
+MOBILENET_TABLE4 = (
+    ("d0", 569, "fp32", 70.9, 89.9), ("d1", 317, "fp32", 68.4, 88.2),
+    ("d2", 150, "fp32", 63.3, 84.9), ("d3", 41,  "fp32", 49.8, 74.2),
+    ("d4", 569, "int8", 70.1, 88.9), ("d5", 317, "int8", 66.8, 87.0),
+    ("d6", 150, "int8", 60.7, 83.2), ("d7", 41,  "int8", 48.0, 72.8),
+)
+
+_WIDTH = {569: 1.0, 317: 0.75, 150: 0.5, 41: 0.25}
+
+
+def ladder():
+    """d0..d7 transformer variant configs mirroring Table 4."""
+    out = {}
+    for did, macs, dt, _t1, _t5 in MOBILENET_TABLE4:
+        q = "int8" if dt == "int8" else "none"
+        out[did] = scale_width(CONFIG, _WIDTH[macs], quant=q)
+    return out

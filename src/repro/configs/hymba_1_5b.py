@@ -1,0 +1,19 @@
+"""Hymba-1.5B hybrid-head decoder [arXiv:2411.13676].
+
+32L, d_model 1600, 25 attention heads (GQA kv=5, head_dim 64) running in
+PARALLEL with Mamba heads inside every layer (outputs fused by learned
+per-path norms + mean); d_ff 5504, vocab 32001, ssm_state 16. Per the
+paper, most layers use sliding-window attention; 3 layers (first, middle,
+last) are global -> long_500k eligible (hybrid).
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", arch_type="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, head_dim=64,
+    d_ff=5504, vocab_size=32_001,
+    attn_pattern="mixed", sliding_window=1024, global_layers=(0, 15, 31),
+    ssm=SSMConfig(state_dim=16, d_conv=4, expand=2),
+    mlp_act="swiglu", rope_theta=10_000.0,
+    citation="arXiv:2411.13676 (Hymba)",
+)

@@ -1,0 +1,11 @@
+from repro.core.env import (EXPERIMENTS, THRESHOLDS, EndEdgeCloudEnv,
+                            Scenario)
+from repro.core.spaces import SpaceSpec, restricted_actions
+from repro.core.qlearning import QLearningAgent, QLearningConfig
+from repro.core.dqn import DQNAgent, DQNConfig
+from repro.core.bruteforce import bruteforce_complexity, bruteforce_optimal
+from repro.core.orchestrator import (IntelligentOrchestrator, TrainResult,
+                                     train_agent)
+from repro.core.baselines import (fixed_strategy_action,
+                                  fixed_strategy_response, make_sota_agent)
+from repro.core.transfer import transfer_experiment

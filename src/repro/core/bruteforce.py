@@ -1,0 +1,34 @@
+"""Brute-force oracle (paper §4.2.2 Eq. 5-6, Table 11 last column).
+
+Searches the entire joint action space (10^N) against the environment's
+noise-free expected model, exactly as the paper's design-time "true
+optimal configuration" used to score the agents' prediction accuracy.
+Fully vectorized; also used by tests as the optimality reference.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.env import EndEdgeCloudEnv
+
+
+def bruteforce_optimal(env: EndEdgeCloudEnv, threshold: float,
+                       actions: Optional[np.ndarray] = None):
+    """Returns (best_action, best_ms, best_acc, n_evaluated)."""
+    actions = env.spec.all_actions() if actions is None else actions
+    ms, acc = env.expected_response_batch(actions)
+    feasible = (acc > threshold) | np.isclose(acc, threshold)
+    if not feasible.any():
+        raise ValueError("no feasible action for threshold %.2f" % threshold)
+    ms_f = np.where(feasible, ms, np.inf)
+    i = int(np.argmin(ms_f))
+    return int(actions[i]), float(ms[i]), float(acc[i]), len(actions)
+
+
+def bruteforce_complexity(n_users: int) -> float:
+    """Eq. 6: |S| x |A| state-action pairs the naive search visits."""
+    l_end = 2 * 2 * 2
+    l_up = 9 * 2 * 2
+    return (l_end ** n_users) * (l_up ** 2) * (10.0 ** n_users)

@@ -1,0 +1,236 @@
+"""Deep Q-Learning agent with experience replay (paper Algorithm 2).
+
+Two network forms, both pure JAX (jit + grad; optimizer = repro AdamW):
+
+* ``form='paper'`` — the paper's architecture: the network takes
+  (state, action) as INPUT and emits a scalar Q ("DQN inputs include
+  current state and possible action, and outputs the corresponding
+  Q-value"). Action selection vmaps the net over candidate joint actions.
+  Faithful but O(10^N) per argmax — used for N<=3 (as the paper's own
+  Table 7 starts DQL at 3 users).
+* ``form='factored'`` — beyond-paper fast variant (documented in
+  EXPERIMENTS.md): the net maps state -> per-user action values (N x 10)
+  and the joint Q is their sum (VDN-style decomposition). Argmax and the
+  replay-target max are O(N*10), making 4-5-user training tractable on
+  this host. Fidelity tests compare both forms on small N.
+
+Hidden sizes follow paper §5.4: two fully-connected layers with 48/64/128
+units for 3/4/5 users; replay capacity 1000, mini-batch 64, eps-greedy
+with eps0=1 and per-N decay (Table 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.replay import ReplayBuffer
+from repro.core.spaces import N_PER_USER_ACTIONS, SpaceSpec
+from repro.training.optimizer import AdamWConfig, apply_updates, init_opt_state
+
+PAPER_HIDDEN = {1: 32, 2: 32, 3: 48, 4: 64, 5: 128}
+PAPER_EPS_DECAY = {3: 0.4, 4: 0.7, 5: 0.9}    # Table 7 (per 1000 steps here)
+
+
+@dataclasses.dataclass
+class DQNConfig:
+    lr: float = 1e-3                  # paper Table 7
+    gamma: float = 0.1
+    eps_start: float = 1.0
+    eps_decay_per_1k: Optional[float] = None   # None -> Table 7
+    eps_min: float = 0.02
+    replay_capacity: int = 1000       # paper §5.4
+    batch_size: int = 64              # paper §5.4
+    hidden: Optional[int] = None      # None -> paper §5.4 by n_users
+    train_every: int = 1
+    form: str = "paper"               # 'paper' | 'factored'
+
+
+def _mlp_init(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, key = jax.random.split(key)
+        params.append({"w": jax.random.normal(k1, (a, b), jnp.float32)
+                       * np.sqrt(2.0 / a),
+                       "b": jnp.zeros((b,), jnp.float32)})
+    return params
+
+
+def _mlp_apply(params, x):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+class DQNAgent:
+    def __init__(self, spec: SpaceSpec, cfg: DQNConfig = None,
+                 actions: Optional[np.ndarray] = None, seed: int = 0,
+                 accuracy_threshold: Optional[float] = None):
+        """accuracy_threshold: the QoS goal (paper Fig. 4) — when given,
+        the factored form's greedy pass enumerates per-user top-k combos
+        and filters by the (known) model-accuracy table, restoring the
+        global constraint the sum decomposition cannot represent."""
+        self.accuracy_threshold = accuracy_threshold
+        self.spec = spec
+        self.cfg = cfg or DQNConfig()
+        if self.cfg.eps_decay_per_1k is None:
+            d = PAPER_EPS_DECAY.get(spec.n_users, 0.9)
+            self.cfg = dataclasses.replace(self.cfg, eps_decay_per_1k=d)
+        if self.cfg.hidden is None:
+            self.cfg = dataclasses.replace(
+                self.cfg, hidden=PAPER_HIDDEN.get(spec.n_users, 128))
+        self.actions = (spec.all_actions() if actions is None
+                        else np.asarray(actions))
+        self.rng = np.random.default_rng(seed)
+        self.eps = self.cfg.eps_start
+        self.steps = 0
+        self.buffer = ReplayBuffer(self.cfg.replay_capacity, spec.state_dim,
+                                   seed=seed)
+        h = self.cfg.hidden
+        key = jax.random.PRNGKey(seed)
+        if self.cfg.form == "paper":
+            in_dim = spec.state_dim + spec.n_users * N_PER_USER_ACTIONS
+            self.params = _mlp_init(key, [in_dim, h, h, 1])
+            self._avecs = jnp.asarray(self.spec.action_vectors_batch(self.actions))
+        else:
+            out = spec.n_users * N_PER_USER_ACTIONS
+            self.params = _mlp_init(key, [spec.state_dim, h, h, out])
+            self._avecs = None
+            # per-user local action ids implied by self.actions:
+            pu = self.spec.decode_actions_batch(self.actions)
+            self._allowed = np.zeros((spec.n_users, N_PER_USER_ACTIONS), bool)
+            for u in range(spec.n_users):
+                self._allowed[u, np.unique(pu[:, u])] = True
+        self.opt_cfg = AdamWConfig(lr=self.cfg.lr, warmup_steps=0,
+                                   total_steps=10**9, weight_decay=0.0,
+                                   grad_clip=10.0, min_lr_frac=1.0)
+        self.opt = init_opt_state(self.params)
+        self._build_fns()
+
+    # ------------------------------------------------------------------
+    def _build_fns(self):
+        form = self.cfg.form
+        gamma = self.cfg.gamma
+        n, na = self.spec.n_users, N_PER_USER_ACTIONS
+
+        opt_cfg = AdamWConfig(lr=self.cfg.lr, warmup_steps=0,
+                              total_steps=10**9, weight_decay=0.0,
+                              grad_clip=10.0, min_lr_frac=1.0)
+
+        if form == "paper":
+            def q_all(params, svec, avecs):
+                """Q(s, a) for all candidate actions: (K,)"""
+                inp = jnp.concatenate(
+                    [jnp.broadcast_to(svec[None], (avecs.shape[0], svec.shape[0])),
+                     avecs], axis=1)
+                return _mlp_apply(params, inp)[:, 0]
+
+            def loss_fn(params, s, avec, r, s2, avecs):
+                q = _mlp_apply(params, jnp.concatenate([s, avec], 1))[:, 0]
+                q2 = jax.vmap(lambda sv: q_all(params, sv, avecs).max())(s2)
+                target = r + gamma * jax.lax.stop_gradient(q2)
+                return jnp.mean((q - target) ** 2)
+
+            def train(params, opt, s, avec, r, s2, avecs):
+                loss, grads = jax.value_and_grad(loss_fn)(params, s, avec, r,
+                                                          s2, avecs)
+                params, opt, _ = apply_updates(params, grads, opt, opt_cfg)
+                return params, opt, loss
+
+            self._q_all = jax.jit(q_all)
+            self._train = jax.jit(train)
+        else:
+            allowed = jnp.asarray(self._allowed)
+
+            def per_user_q(params, s):
+                """(B, state_dim) -> (B, N, NA) with disallowed = -inf"""
+                q = _mlp_apply(params, s).reshape(-1, n, na)
+                return jnp.where(allowed[None], q, -1e30)
+
+            def loss_fn(params, s, aidx, r, s2):
+                q = per_user_q(params, s)                       # (B,N,NA)
+                qa = jnp.take_along_axis(q, aidx[..., None], 2)[..., 0].sum(1)
+                q2 = per_user_q(params, s2).max(-1).sum(-1)
+                target = r + gamma * jax.lax.stop_gradient(q2)
+                return jnp.mean((qa - target) ** 2)
+
+            def train(params, opt, s, aidx, r, s2):
+                loss, grads = jax.value_and_grad(loss_fn)(params, s, aidx, r,
+                                                          s2)
+                params, opt, _ = apply_updates(params, grads, opt, opt_cfg)
+                return params, opt, loss
+
+            self._per_user_q = jax.jit(per_user_q)
+            self._train = jax.jit(train)
+
+    # ------------------------------------------------------------------
+    def greedy_action(self, state: tuple) -> int:
+        svec = self.spec.state_vector(state)
+        if self.cfg.form == "paper":
+            q = self._q_all(self.params, jnp.asarray(svec), self._avecs)
+            return int(self.actions[int(np.argmax(np.asarray(q)))])
+        q = np.asarray(self._per_user_q(self.params, jnp.asarray(svec[None])))[0]
+        if self.accuracy_threshold is None:
+            return self.spec.encode_action(q.argmax(-1))
+        # constraint-aware greedy: per-user top-k -> feasible combos by the
+        # known model-accuracy table (the agent's QoS-goal knowledge).
+        from repro.core.env import TOP5
+        from repro.core.spaces import A_EDGE
+        k = min(4, q.shape[-1])
+        topk = np.argsort(q, axis=-1)[:, ::-1][:, :k]           # (N, k)
+        import itertools
+        best, best_q = None, -np.inf
+        th = self.accuracy_threshold
+        for combo in itertools.product(range(k), repeat=self.spec.n_users):
+            per = topk[np.arange(self.spec.n_users), list(combo)]
+            acc = TOP5[np.where(per < A_EDGE, per, 0)].mean()
+            if not (acc > th or np.isclose(acc, th)):
+                continue
+            qs = q[np.arange(self.spec.n_users), per].sum()
+            if qs > best_q:
+                best_q, best = qs, per
+        if best is None:
+            best = q.argmax(-1)
+        return self.spec.encode_action(best)
+
+    def act(self, state: tuple) -> int:
+        if self.rng.random() < self.eps:
+            return int(self.actions[self.rng.integers(len(self.actions))])
+        return self.greedy_action(state)
+
+    def update(self, state, action: int, reward: float, next_state):
+        svec = self.spec.state_vector(state)
+        s2vec = self.spec.state_vector(next_state)
+        self.buffer.push(svec, action, reward, s2vec)
+        self.steps += 1
+        # eps decay: Table 7 value applied per 1000 invocations
+        if self.steps % 1000 == 0:
+            self.eps = max(self.cfg.eps_min,
+                           self.eps * (1.0 - self.cfg.eps_decay_per_1k))
+        if len(self.buffer) < self.cfg.batch_size:
+            return None
+        if self.steps % self.cfg.train_every:
+            return None
+        s, a, r, s2 = self.buffer.sample(self.cfg.batch_size)
+        if self.cfg.form == "paper":
+            avec = jnp.asarray(self.spec.action_vectors_batch(a))
+            self.params, self.opt, loss = self._train(
+                self.params, self.opt, jnp.asarray(s), avec, jnp.asarray(r),
+                jnp.asarray(s2), self._avecs)
+        else:
+            aidx = jnp.asarray(self.spec.decode_actions_batch(a))
+            self.params, self.opt, loss = self._train(
+                self.params, self.opt, jnp.asarray(s), aidx, jnp.asarray(r),
+                jnp.asarray(s2))
+        return float(loss)
+
+    # transfer learning (paper Fig. 7)
+    def warm_start_from(self, other: "DQNAgent"):
+        self.params = jax.tree_util.tree_map(lambda x: x.copy(), other.params)
+        self.opt = init_opt_state(self.params)

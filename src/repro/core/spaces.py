@@ -1,0 +1,107 @@
+"""State and action spaces (paper §4.2, Tables 2-3).
+
+State (Eq. 3): S_tau = {P^E, M^E, B^E, P^C, M^C, B^C, P^S1, M^S1, B^S1, ...}
+with Table-3 discretization: end-node P/M/B binary; edge/cloud P has nine
+levels, M/B binary.
+
+Action (paper §4.2 + §6.1): edge/cloud always run the most-accurate model
+d0; end-nodes choose among l=8 models locally. Per-user action ids:
+  0..7  -> execute locally with model d0..d7
+  8     -> offload to edge (model d0)
+  9     -> offload to cloud (model d0)
+The joint action for N users is the base-10 tuple; |A| = 10^N (Table 11's
+brute-force space, Eq. 5-6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Tuple
+
+import numpy as np
+
+N_MODELS = 8
+N_PER_USER_ACTIONS = N_MODELS + 2          # 8 local + edge + cloud
+A_EDGE, A_CLOUD = 8, 9
+
+EDGE_CPU_LEVELS = 9
+CLOUD_CPU_LEVELS = 9
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceSpec:
+    n_users: int
+
+    @property
+    def n_joint_actions(self) -> int:
+        return N_PER_USER_ACTIONS ** self.n_users
+
+    @property
+    def state_dim(self) -> int:
+        return 3 * (self.n_users + 2)
+
+    # ---- actions ----
+    def encode_action(self, per_user) -> int:
+        a = 0
+        for u in per_user:
+            a = a * N_PER_USER_ACTIONS + int(u)
+        return a
+
+    def decode_action(self, a: int) -> Tuple[int, ...]:
+        out = []
+        for _ in range(self.n_users):
+            out.append(a % N_PER_USER_ACTIONS)
+            a //= N_PER_USER_ACTIONS
+        return tuple(reversed(out))
+
+    def decode_actions_batch(self, actions: np.ndarray) -> np.ndarray:
+        """(K,) joint ids -> (K, N) per-user ids."""
+        k = actions.shape[0]
+        out = np.empty((k, self.n_users), np.int64)
+        a = actions.astype(np.int64).copy()
+        for i in range(self.n_users - 1, -1, -1):
+            out[:, i] = a % N_PER_USER_ACTIONS
+            a //= N_PER_USER_ACTIONS
+        return out
+
+    def all_actions(self) -> np.ndarray:
+        return np.arange(self.n_joint_actions, dtype=np.int64)
+
+    # ---- states ----
+    def state_tuple(self, p_e, m_e, b_e, p_c, m_c, b_c, ends) -> tuple:
+        """ends: sequence of (p, m, b) binaries per user."""
+        flat = [int(p_e), int(m_e), int(b_e), int(p_c), int(m_c), int(b_c)]
+        for (p, m, b) in ends:
+            flat += [int(p), int(m), int(b)]
+        return tuple(flat)
+
+    def state_vector(self, state: tuple) -> np.ndarray:
+        """Normalized float encoding for the DQN (CPU levels -> [0,1])."""
+        v = np.asarray(state, np.float32).copy()
+        v[0] /= EDGE_CPU_LEVELS - 1
+        v[3] /= CLOUD_CPU_LEVELS - 1
+        return v
+
+    def action_vector(self, a: int) -> np.ndarray:
+        """One-hot per-user encoding (N * 10) for the (s,a)->Q network."""
+        per_user = self.decode_action(a)
+        v = np.zeros((self.n_users, N_PER_USER_ACTIONS), np.float32)
+        v[np.arange(self.n_users), list(per_user)] = 1.0
+        return v.reshape(-1)
+
+    def action_vectors_batch(self, actions: np.ndarray) -> np.ndarray:
+        per_user = self.decode_actions_batch(actions)           # (K, N)
+        k = actions.shape[0]
+        v = np.zeros((k, self.n_users, N_PER_USER_ACTIONS), np.float32)
+        v[np.arange(k)[:, None], np.arange(self.n_users)[None, :], per_user] = 1.0
+        return v.reshape(k, -1)
+
+
+def restricted_actions(spec: SpaceSpec) -> np.ndarray:
+    """SOTA [36] baseline action set: computation offloading only, always
+    the most-accurate model -> per-user {local d0, edge, cloud} = 3^N."""
+    per = [0, A_EDGE, A_CLOUD]
+    joint = []
+    for combo in itertools.product(per, repeat=spec.n_users):
+        joint.append(spec.encode_action(combo))
+    return np.asarray(joint, np.int64)

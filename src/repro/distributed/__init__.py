@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (activate_mesh, current_mesh, logical,
+                                        param_shardings, shard_moe_dispatch)

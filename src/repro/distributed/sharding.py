@@ -1,0 +1,195 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Mesh axes:
+  'pod'   - pods (multi-pod only), extra data-parallel dim
+  'data'  - within-pod data parallel / FSDP axis
+  'model' - tensor/expert parallel axis
+
+Logical activation/parameter axes are mapped through RULES. Every
+constraint is divisibility-checked per dimension; a dim that is not
+divisible by its mapped mesh axes (e.g. 25 heads over a 16-way 'model'
+axis, or batch=1 decode over 'data') silently falls back to replication,
+and a mesh axis is never assigned twice within one spec (first dim wins
+— e.g. a KV cache shards 'data' on batch when batch is wide, else on the
+cache-length dim for long-context decode). This keeps ONE rule table
+valid across all 10 architectures x 4 input shapes.
+
+The module is a process-global context (``activate_mesh``) so model code
+can annotate activations without threading a mesh handle everywhere;
+with no active mesh every annotation is the identity (CPU smoke tests).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (resolved against the active mesh; mesh axes
+# absent from the mesh are dropped, so one table serves 2D and 3D meshes)
+RULES = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "seq": (),
+    "kv_seq": ("pod", "data"),     # long-context decode: shard cache length
+    # decode caches: after 'batch' takes what divides, the cache-length
+    # dim absorbs every remaining mesh axis (incl. 'model' when kv_heads
+    # is not divisible by it) — flash-decode style sequence sharding; the
+    # partial softmax is handled by GSPMD all-reduces (verified).
+    "cache_len": ("pod", "data", "model"),
+    "model": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "embed": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "d_inner": ("model",),
+    None: (),
+}
+
+_STATE = {"mesh": None}
+
+
+def activate_mesh(mesh: Optional[Mesh]):
+    _STATE["mesh"] = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE["mesh"]
+
+
+def _resolve(mesh: Mesh, logical_axes):
+    names = set(mesh.axis_names)
+    out = []
+    for ax in logical_axes:
+        axes = tuple(a for a in RULES.get(ax, ()) if a in names)
+        out.append(axes)
+    return out
+
+
+def _checked_spec(mesh: Mesh, shape, resolved) -> P:
+    """Divisibility check + no-duplicate-axis guarantee (first dim wins)."""
+    used = set()
+    fixed = []
+    resolved = list(resolved) + [()] * (len(shape) - len(resolved))
+    for dim, axes in zip(shape, resolved):
+        axes = tuple(a for a in axes if a not in used)
+        size = math.prod(mesh.shape[a] for a in axes) if axes else 1
+        if axes and dim % size == 0:
+            used.update(axes)
+            fixed.append(axes if len(axes) > 1 else axes[0])
+        else:
+            fixed.append(None)
+    return P(*fixed)
+
+
+def spec_for(shape, logical_axes, mesh: Optional[Mesh] = None) -> Optional[P]:
+    mesh = mesh or _STATE["mesh"]
+    if mesh is None:
+        return None
+    return _checked_spec(mesh, shape, _resolve(mesh, logical_axes))
+
+
+def logical(x, *logical_axes):
+    """Annotate activation x with logical axes (identity without a mesh)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, logical_axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_moe_dispatch(x):
+    """(B, E, C, D) dispatched MoE activations: experts to 'model' — the
+    reshard from token layout is the expert-parallel all-to-all."""
+    return logical(x, "batch", "expert", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings, matched by (parent, leaf) names in the param tree.
+
+# weight-dict parents ('w'/'w_q'/'s' leaves) -> logical axes of the 2D mat
+_PARENT_RULES = {
+    "embed": ("vocab", "embed"),
+    "lm_head": ("fsdp", "vocab"),
+    "proj_img": ("fsdp", "model"),
+    "router": (None, None),
+    "wq": ("fsdp", "model"),
+    "wk": ("fsdp", "model"),
+    "wv": ("fsdp", "model"),
+    "wo": ("model", "fsdp"),
+    "w_gate": ("fsdp", "mlp"),
+    "w_up": ("fsdp", "mlp"),
+    "w_down": ("mlp", "fsdp"),
+    "in_proj": ("fsdp", "d_inner"),
+    "x_proj": ("d_inner", None),
+    "out_proj": ("d_inner", "fsdp"),
+}
+# MoE expert mats carry a leading E dim and shard experts over 'model'
+# (expert parallel), so the mat dims must avoid 'model':
+_MOE_PARENT_RULES = {
+    "w_gate": ("expert", "fsdp", None),
+    "w_up": ("expert", "fsdp", None),
+    "w_down": ("expert", None, "fsdp"),
+}
+# direct array leaves
+_LEAF_RULES = {
+    "dt_w": (None, "d_inner"),
+    "dt_b": ("d_inner",),
+    "conv_w": (None, "d_inner"),
+    "conv_b": ("d_inner",),
+    "A_log": ("d_inner", None),
+    "D": ("d_inner",),
+}
+
+
+def _path_parts(path):
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return parts
+
+
+def logical_axes_for_param(path, ndim: int):
+    parts = _path_parts(path)
+    leaf = parts[-1]
+    parent = parts[-2] if len(parts) >= 2 else ""
+    in_moe = "moe" in parts
+    if leaf in ("w", "w_q", "s"):
+        if in_moe and parent in _MOE_PARENT_RULES:
+            axes = _MOE_PARENT_RULES[parent]
+        else:
+            axes = _PARENT_RULES.get(parent, ())
+        if leaf == "s" and axes:  # quant scales broadcast over the input dim
+            head = ("expert",) if (in_moe and len(axes) == 3) else ()
+            axes = head + (None,) * (ndim - len(head) - 1) + (axes[-1],)
+    else:
+        axes = _LEAF_RULES.get(leaf, ())
+    axes = tuple(axes)
+    if len(axes) < ndim:      # leading stacked-layer (or other) dims: None
+        axes = (None,) * (ndim - len(axes)) + axes
+    elif len(axes) > ndim:
+        axes = axes[-ndim:]
+    return axes
+
+
+def param_shardings(params_shapes, mesh: Optional[Mesh] = None):
+    """Pytree of NamedSharding matching ``params_shapes`` (arrays or
+    ShapeDtypeStructs)."""
+    mesh = mesh or _STATE["mesh"]
+    if mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, params_shapes)
+
+    def one(path, leaf):
+        axes = logical_axes_for_param(path, len(leaf.shape))
+        spec = _checked_spec(mesh, leaf.shape, _resolve(mesh, axes))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)

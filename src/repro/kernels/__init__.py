@@ -1,0 +1,2 @@
+from repro.kernels.ops import (decode_attention, flash_attention,
+                               int8_matmul, quantize, selective_scan)

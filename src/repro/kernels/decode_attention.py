@@ -1,0 +1,98 @@
+"""Single-token (decode) attention Pallas TPU kernel.
+
+One new query token per sequence attends to a long KV cache. The grid is
+(batch, Skv/BK): each program sweeps its sequence's cache in BK-sized
+VMEM tiles, carrying per-head online-softmax state — acc (H, hd) f32,
+m/l (H, 1) — in VMEM scratch. Invalid slots (unwritten ring-buffer
+entries, out-of-window positions) arrive pre-folded into an additive
+bias row (B, Skv) computed by ops.py, so the kernel itself is
+layout-agnostic (works for both linear and ring cache layouts). GQA:
+the (KV*G, hd) query block is reshaped per kv-head and contracted with
+(BK, hd) tiles as 2D MXU dots per kv head (static python loop — KV<=16).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_kv: int, bk: int, scale: float):
+    kj = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (H, hd)
+    h, hd = q.shape
+    g = h // n_kv
+    bias = bias_ref[0].astype(jnp.float32)              # (BK,)
+    kb = k_ref[0].astype(jnp.float32)                   # (BK, KV, hd)
+    vb = v_ref[0].astype(jnp.float32)
+
+    rows = []
+    for kvh in range(n_kv):
+        qh = q[kvh * g:(kvh + 1) * g]                   # (G, hd)
+        kh = kb[:, kvh, :]                              # (BK, hd)
+        s = jax.lax.dot_general(qh, kh, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        rows.append(s * scale + bias[None, :])
+    s = jnp.concatenate(rows, axis=0)                   # (H, BK)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, -1, keepdims=True)
+    m_ref[...] = m_new
+    outs = []
+    for kvh in range(n_kv):
+        ph = p[kvh * g:(kvh + 1) * g]                   # (G, BK)
+        vh = vb[:, kvh, :]                              # (BK, hd)
+        outs.append(jax.lax.dot_general(ph, vh, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+    acc_ref[...] = acc_ref[...] * corr + jnp.concatenate(outs, axis=0)
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k_cache, v_cache, bias, *, bk: int = 512,
+                            scale: float = 0.0, interpret: bool = True):
+    """q: (B, H, hd); caches: (B, S, KV, hd); bias: (B, S) additive."""
+    b, h, hd = q.shape
+    s, n_kv = k_cache.shape[1], k_cache.shape[2]
+    bk = min(bk, s)
+    grid = (b, s // bk)
+    kernel = functools.partial(_kernel, n_kv=n_kv, bk=bk,
+                               scale=scale or 1.0 / math.sqrt(hd))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bk, n_kv, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bk, n_kv, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, bias)

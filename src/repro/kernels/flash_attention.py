@@ -1,0 +1,118 @@
+"""Flash attention (prefill/train) Pallas TPU kernel.
+
+Blocked online-softmax attention with explicit VMEM tiling:
+  grid = (batch*q_heads, Sq/BQ, Skv/BK), KV innermost so the f32
+  (BQ, head_dim) accumulator + (BQ, 1) running max/denominator live in
+  VMEM scratch across the KV sweep. Causal and sliding-window masks skip
+  whole KV blocks outside the band (pl.when), which is where the TPU win
+  comes from for gemma3/hymba's 1024-token windows. GQA is handled by
+  mapping each q-head program to its kv head in the BlockSpec index_map —
+  no KV replication in HBM.
+
+MXU alignment: BQ/BK default to 128 and head_dim is padded to a multiple
+of 128 by the ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            seq_kv: int, q_offset: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # q positions are right-aligned against the kv sequence (q_offset =
+    # seq_kv - seq_q for ragged causal / chunked prefill).
+    q_start = qi * bq + q_offset
+    k_start = kj * bk
+    # Block-level skip: causal => k_start <= q_end; window => k_end > q_start - window
+    run = jnp.asarray(True)
+    if causal:
+        run &= k_start <= q_start + bq - 1
+    if window:
+        run &= (k_start + bk - 1) > (q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)            # (BK, hd)
+        v = v_ref[0].astype(jnp.float32)            # (BK, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < seq_kv
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)       # (BQ,1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, -1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           bq: int = 128, bk: int = 128, scale: float = 0.0,
+                           seq_kv: int = 0, q_offset: int = 0,
+                           interpret: bool = True):
+    """q: (BH, Sq, hd); k, v: (BKV, Skv, hd) with BH = BKV * group.
+    Caller (ops.py) flattens batch/head dims and pads Sq/Skv/hd; seq_kv is
+    the UNPADDED kv length (mask boundary), q_offset right-aligns q."""
+    bh, sq, hd = q.shape
+    bkv, skv, _ = k.shape
+    group = bh // bkv
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    grid = (bh, sq // bq, skv // bk)
+    scale = scale or 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk,
+                               seq_kv=seq_kv or skv, q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,61 @@
+"""Int8 x Int8 -> Int32 matmul Pallas TPU kernel (the paper's quantized
+model variants d4..d7, adapted: MXU int8 path instead of ARM NEON).
+
+Symmetric quantization: x_q (M,K) int8 with per-row scales sx (M,1),
+w_q (K,N) int8 with per-column scales sw (1,N). Grid (M/BM, N/BN, K/BK)
+with K innermost; the int32 accumulator tile (BM, BN) persists in VMEM
+scratch across the K sweep and is rescaled to f32 once at the end —
+exactly one dequant per output tile. Tiles default to 256x256x256
+(int8 MXU native packing is 2x denser than bf16, so larger tiles still
+fit the ~16 MB VMEM budget: 3*256*256 + 4*256*256 bytes << VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref):
+    kk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(kk == nk - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * sx_ref[...] * sw_ref[...]).astype(o_ref.dtype)
+
+
+def int8_matmul_kernel(x_q, sx, w_q, sw, *, bm: int = 256, bn: int = 256,
+                       bk: int = 256, out_dtype=jnp.float32,
+                       interpret: bool = True):
+    """x_q: (M,K) int8; sx: (M,1) f32; w_q: (K,N) int8; sw: (1,N) f32."""
+    m, k = x_q.shape
+    _, n = w_q.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, sx, sw)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth used by
+tests/test_kernels.py shape/dtype sweeps)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  bias=None):
+    """Naive exact attention. q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd); GQA via
+    head grouping. window>0 = sliding causal window. bias: (B,Skv) additive
+    (used to mask invalid cache slots)."""
+    b, sq, h, hd = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    g = h // n_kv
+    qg = q.reshape(b, sq, n_kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    s *= 1.0 / math.sqrt(hd)
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)   # right-aligned
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if bias is not None:
+        s = s + bias[:, None, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, bias):
+    """q: (B,H,hd); caches: (B,S,KV,hd); bias: (B,S) additive mask."""
+    b, h, hd = q.shape
+    o = attention_ref(q[:, None], k_cache, v_cache, causal=False, bias=bias)
+    return o[:, 0]
+
+
+def int8_matmul_ref(x_q, sx, w_q, sw):
+    """x_q: (M,K) int8; sx: (M,1) f32; w_q: (K,N) int8; sw: (1,N) f32."""
+    acc = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * sx * sw
+
+
+def quantize_ref(x, axis=-1):
+    """Symmetric per-row int8 quantization -> (x_q, scale)."""
+    amax = jnp.max(jnp.abs(x).astype(jnp.float32), axis=axis, keepdims=True) + 1e-8
+    s = amax / 127.0
+    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127).astype(jnp.int8)
+    return x_q, s
+
+
+def selective_scan_ref(u, dt, A, B, C, D):
+    """Sequential (lax.scan over time) selective-SSM oracle.
+
+    u, dt: (Bt,S,di); A: (di,N); B,C: (Bt,S,N); D: (di,).
+    Returns (y: (Bt,S,di), h_last: (Bt,di,N)); all math in f32.
+    """
+    uf, dtf = u.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+
+    def step(h, inp):
+        ut, dtt, bt, ct = inp          # (Bt,di),(Bt,di),(Bt,N),(Bt,N)
+        dA = jnp.exp(dtt[..., None] * A[None])           # (Bt,di,N)
+        dBu = (dtt * ut)[..., None] * bt[:, None, :]
+        h = h * dA + dBu
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((u.shape[0], u.shape[2], A.shape[1]), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0,
+                              (uf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+                               Bf.swapaxes(0, 1), Cf.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + uf * D[None, None]
+    return y.astype(u.dtype), h_last

@@ -1,0 +1,70 @@
+"""Training launcher: real steps on the available devices (CPU smoke /
+TPU slice), with the same sharding rules as the dry-run.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-7b --reduced \
+      --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_pytree
+from repro.configs import INPUT_SHAPES, get_config, reduced
+from repro.distributed import sharding
+from repro.models import build_model
+from repro.training import AdamWConfig, init_state, make_train_step
+from repro.training.data import batches
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer smoke config (CPU)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+    state = init_state(model, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                          total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+
+    extras = {}
+    if cfg.arch_type == "vlm":
+        extras["img_embeds"] = lambda b: np.random.default_rng(0).standard_normal(
+            (b, cfg.n_img_tokens, cfg.d_model), dtype=np.float32)
+    if cfg.is_encdec:
+        extras["frames"] = lambda b: np.random.default_rng(0).standard_normal(
+            (b, cfg.enc_seq, cfg.d_model), dtype=np.float32)
+
+    t0 = time.perf_counter()
+    for i, b in enumerate(batches(cfg.vocab_size, args.batch, args.seq,
+                                  args.steps, extras=extras)):
+        state, metrics = step_fn(state, {k: jnp.asarray(v) for k, v in b.items()})
+        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(metrics['loss']):8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):8.3f} "
+                  f"lr {float(metrics['lr']):.2e}", flush=True)
+    dt = time.perf_counter() - t0
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s)")
+    if args.save:
+        save_pytree(args.save, state["params"])
+        print("saved", args.save)
+
+
+if __name__ == "__main__":
+    main()

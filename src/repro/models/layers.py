@@ -1,0 +1,285 @@
+"""Core building blocks: linear (incl. int8), norms, RoPE, attention.
+
+All modules are functional: ``init_*`` returns a param pytree,
+``apply``-style functions consume it. Parameters destined for the layer
+scan carry a leading stacked-layer axis added by the caller
+(transformer.py) via vmapped init.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+
+
+def dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# Linear (dense or int8-quantized)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.bfloat16, quant: str = "none",
+                scale: Optional[float] = None):
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+    if quant == "int8":
+        s = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 127.0 + 1e-8
+        w_q = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
+        return {"w_q": w_q, "s": s.astype(jnp.float32)}
+    return {"w": w.astype(dtype)}
+
+
+def linear(params, x):
+    """y = x @ W. int8 path: dynamic per-token activation quantization and
+    an int8 x int8 -> int32 contraction (MXU int8 path on TPU; mirrored by
+    kernels/int8_matmul.py)."""
+    if "w_q" in params:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32) + 1e-8
+        sx = amax / 127.0
+        x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / sx), -127, 127).astype(jnp.int8)
+        acc = jax.lax.dot_general(
+            x_q, params["w_q"], (((x_q.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        y = acc.astype(jnp.float32) * sx * params["s"]
+        return y.astype(x.dtype)
+    return jnp.dot(x, params["w"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def init_rmsnorm(d: int):
+    return {"g": jnp.zeros((d,), jnp.float32)}   # gemma-style (1+g)
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["g"])
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores. All take q (B,Sq,H,hd), k/v (B,Skv,KV,hd) with H = KV*G.
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """(B,Sq,KV,G,hd) x (B,Skv,KV,hd) -> (B,KV,G,Sq,Skv) in f32."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+
+
+def _split_groups(q, n_kv):
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+                      chunk: int = 1024, softcap: float = 0.0):
+    """Online-softmax attention, lax.scan over KV chunks (memory-bounded;
+    the jnp mirror of kernels/flash_attention.py).
+
+    window > 0 restricts to kv_pos in (q_pos - window, q_pos].
+    q_offset: absolute position of q[0] (for decode / chunked prefill).
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    n_kv = k.shape[2]
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = _split_groups(q, n_kv)                       # (B,Sq,KV,G,hd)
+    scale = 1.0 / math.sqrt(hd)
+    q_pos = q_offset + jnp.arange(sq)
+
+    kc = k.reshape(b, n_chunks, chunk, n_kv, hd).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, chunk, n_kv, hd).swapaxes(0, 1)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, (kb, vb) = inp
+        kv_pos = ci * chunk + jnp.arange(chunk)
+        s = _gqa_scores(qg, kb) * scale               # (B,KV,G,Sq,C)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = kv_pos[None, :] < skv + jnp.zeros((sq, 1), jnp.int32)  # valid (unpadded)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    kv_g = q.shape[2] // n_kv
+    m0 = jnp.full((b, n_kv, kv_g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, kv_g, sq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, kv_g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(n_chunks), (kc, vc)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def local_banded_attention(q, k, v, *, window: int, softcap: float = 0.0):
+    """Sliding-window causal attention for prefill/train: block-local trick
+    (block size = window; each block attends to itself + previous block with
+    an exact in-band mask) -> O(S * 2W) instead of O(S^2)."""
+    b, s, h, hd = q.shape
+    n_kv = k.shape[2]
+    w = min(window, s)
+    nb = -(-s // w)
+    pad = nb * w - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(b, nb, w, h, hd)
+    kb = k.reshape(b, nb, w, n_kv, hd)
+    vb = v.reshape(b, nb, w, n_kv, hd)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)        # (B,nb,2W,KV,hd)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    qg = qb.reshape(b, nb, w, n_kv, h // n_kv, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s_ = jnp.einsum("bnqkgh,bnskh->bnkgqs", qg, k2,
+                    preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s_ = jnp.tanh(s_ / softcap) * softcap
+    qpos = jnp.arange(w)[:, None]                     # within-block
+    kpos = jnp.arange(2 * w)[None, :] - w             # relative to block start
+    block_id = jnp.arange(nb)
+    abs_valid = (block_id[:, None, None] * w + kpos[None]) >= 0   # (nb,W,2W)
+    mask = (kpos <= qpos) & (kpos > qpos - w) & abs_valid
+    s_ = jnp.where(mask[None, :, None, None], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bnkgqs,bnskh->bnqkgh", p.astype(v2.dtype), v2,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, nb * w, h, hd)[:, :s]
+    return o.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_pos, cur_pos, *, window: int = 0,
+                     softcap: float = 0.0):
+    """Single-token attention against a (possibly ring-buffered) cache.
+
+    q: (B,1,H,hd); caches: (B,Sc,KV,hd); kv_pos: (B,Sc) absolute position of
+    each slot (-1 = empty); cur_pos: (B,) position of the new token.
+    The jnp mirror of kernels/decode_attention.py.
+    """
+    b, _, h, hd = q.shape
+    n_kv = k_cache.shape[2]
+    qg = _split_groups(q, n_kv)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (kv_pos >= 0) & (kv_pos <= cur_pos[:, None])
+    if window:
+        valid &= kv_pos > (cur_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + core dispatch)
+
+
+def init_attention(key, cfg, *, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    dtype = dt(cfg.dtype)
+    return {
+        "wq": init_linear(ks[0], d, qd, dtype, cfg.quant),
+        "wk": init_linear(ks[1], d, kvd, dtype, cfg.quant),
+        "wv": init_linear(ks[2], d, kvd, dtype, cfg.quant),
+        "wo": init_linear(ks[3], qd, d, dtype, cfg.quant,
+                          scale=1.0 / math.sqrt(qd * max(1, 2 * cfg.n_layers))),
+    }
+
+
+def attention_qkv(params, x, cfg, positions=None, *, rope: bool = True):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(params["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = linear(params["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = linear(params["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    if rope:
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def init_mlp(key, cfg):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    dtype = dt(cfg.dtype)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {"w_gate": init_linear(ks[0], d, f, dtype, cfg.quant),
+                "w_up": init_linear(ks[1], d, f, dtype, cfg.quant),
+                "w_down": init_linear(ks[2], f, d, dtype, cfg.quant,
+                                      scale=1.0 / math.sqrt(f * max(1, 2 * cfg.n_layers)))}
+    return {"w_up": init_linear(ks[0], d, f, dtype, cfg.quant),
+            "w_down": init_linear(ks[1], f, d, dtype, cfg.quant,
+                                  scale=1.0 / math.sqrt(f * max(1, 2 * cfg.n_layers)))}
+
+
+def mlp(params, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(linear(params["w_gate"], x)) * linear(params["w_up"], x)
+    elif act == "geglu":
+        h = jax.nn.gelu(linear(params["w_gate"], x)) * linear(params["w_up"], x)
+    else:
+        h = jax.nn.gelu(linear(params["w_up"], x))
+    return linear(params["w_down"], h)

@@ -1,0 +1,170 @@
+"""Mamba-1 selective-SSM block (Falcon-Mamba / Hymba SSM path).
+
+Prefill/train: parallel associative scan over the sequence (the jnp
+oracle mirrored by kernels/selective_scan.py). Decode: O(1) recurrent
+step carrying (conv window, h state) in the cache.
+
+Sharding: d_inner is the TP axis ('model'); the scan itself is
+embarrassingly parallel over (batch, d_inner).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_mamba(key, cfg):
+    s = cfg.ssm
+    d, di, n = cfg.d_model, cfg.d_inner, s.state_dim
+    dtr = s.resolved_dt_rank(d)
+    ks = jax.random.split(key, 6)
+    dtype = L.dt(cfg.dtype)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_init = jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32)
+                      * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    inv_softplus = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": L.init_linear(ks[0], d, 2 * di, dtype, cfg.quant),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, di), jnp.float32)
+                   * (1.0 / math.sqrt(s.d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": L.init_linear(ks[2], di, dtr + 2 * n, dtype),
+        "dt_w": (jax.random.normal(ks[3], (dtr, di), jnp.float32)
+                 * (dtr ** -0.5)).astype(jnp.float32),
+        "dt_b": inv_softplus,
+        "A_log": jnp.log(a),                       # (di, N) f32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.init_linear(ks[5], di, d, dtype, cfg.quant,
+                                  scale=1.0 / math.sqrt(di * max(1, 2 * cfg.n_layers))),
+    }
+
+
+def _ssm_params(params, xc, cfg):
+    """xc: (..., di) post-conv activations -> dt (..,di), B,C (..,N)."""
+    s = cfg.ssm
+    dtr = s.resolved_dt_rank(cfg.d_model)
+    proj = L.linear(params["x_proj"], xc).astype(jnp.float32)
+    dt_r, b_, c_ = jnp.split(proj, [dtr, dtr + s.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_w"] + params["dt_b"])
+    return dt, b_, c_
+
+
+def selective_scan_chunked(u, dt, A, B, C, D, chunk: int):
+    """Chunked scan (Perf iteration): sequential lax.scan over chunks
+    carrying h, associative scan within a chunk — bounds the materialized
+    (Bt, S, di, N) state tensor to S=chunk (16x memory cut at chunk=256
+    for train_4k) at the cost of serializing S/chunk chunk launches.
+
+    Padding with dt=0 is exact: dA=1, dBu=0 (identity transitions)."""
+    bt, s, di = u.shape
+    n = A.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        u, dt, B, C = zf(u), zf(dt), zf(B), zf(C)
+    nc = (s + pad) // chunk
+    sw = lambda x: x.reshape(bt, nc, chunk, -1).swapaxes(0, 1)
+    uc, dtc, Bc, Cc = sw(u.astype(jnp.float32)), sw(dt.astype(jnp.float32)), \
+        sw(B.astype(jnp.float32)), sw(C.astype(jnp.float32))
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, b1 * a2 + b2
+
+    def body(h0, inp):
+        u_, dt_, b_, c_ = inp
+        dA = jnp.exp(dt_[..., None] * A[None, None])
+        dBu = (dt_ * u_)[..., None] * b_[:, :, None, :]
+        aA, aB = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+        h = aA * h0[:, None] + aB                      # (bt, chunk, di, n)
+        y = jnp.einsum("bsdn,bsn->bsd", h, c_) + u_ * D[None, None]
+        return h[:, -1], y
+
+    h_last, ys = jax.lax.scan(jax.checkpoint(body),
+                              jnp.zeros((bt, di, n), jnp.float32),
+                              (uc, dtc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(bt, s + pad, di)[:, :s]
+    return y.astype(u.dtype), h_last
+
+
+def selective_scan_ref(u, dt, A, B, C, D):
+    """Associative-scan selective SSM (jnp oracle).
+
+    u, dt: (Bt, S, di); A: (di, N); B, C: (Bt, S, N); D: (di,)
+    Returns y: (Bt, S, di), h_last: (Bt, di, N).
+    """
+    uf = u.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * A[None, None])                 # (B,S,di,N)
+    dBu = (dt * uf)[..., None] * B[:, :, None, :]               # (B,S,di,N)
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, b1 * a2 + b2
+
+    aA, aB = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    h = aB                                                      # (B,S,di,N)
+    y = jnp.einsum("bsdn,bsn->bsd", h, C) + uf * D[None, None]
+    return y.astype(u.dtype), h[:, -1].astype(jnp.float32)
+
+
+def causal_conv1d(x, w, b, *, state=None):
+    """Depthwise causal conv. x: (Bt,S,di); w: (K,di); state: (Bt,K-1,di)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y + b.astype(x.dtype)[None, None], new_state
+
+
+def mamba_block(params, x, cfg, *, cache=None):
+    """x: (Bt, S, d_model) -> (y, new_cache).
+
+    cache (decode): {'conv': (Bt, K-1, di), 'h': (Bt, di, N)} or None.
+    For S>1 (prefill/train) uses the associative scan; S==1 with cache uses
+    the recurrent step.
+    """
+    bt, s, _ = x.shape
+    xz = L.linear(params["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                           # (Bt,S,di)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = causal_conv1d(xi, params["conv_w"], params["conv_b"],
+                                 state=conv_state)
+    xc = jax.nn.silu(xc)
+    dt, b_, c_ = _ssm_params(params, xc, cfg)
+    A = -jnp.exp(params["A_log"])                               # (di,N)
+
+    from repro.tuning import FLAGS
+    if s == 1 and cache is not None:
+        h_prev = cache["h"]                                     # (Bt,di,N)
+        dA = jnp.exp(dt[:, 0, :, None] * A[None])
+        dBu = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * b_[:, 0, None, :]
+        h = h_prev * dA + dBu
+        y = jnp.einsum("bdn,bn->bd", h, c_[:, 0]) + xc[:, 0].astype(jnp.float32) * params["D"]
+        y = y[:, None, :].astype(x.dtype)
+        h_last = h
+    elif FLAGS["mamba_chunk"] and s > FLAGS["mamba_chunk"]:
+        y, h_last = selective_scan_chunked(xc, dt, A, b_, c_, params["D"],
+                                           FLAGS["mamba_chunk"])
+    else:
+        y, h_last = selective_scan_ref(xc, dt, A, b_, c_, params["D"])
+
+    y = y * jax.nn.silu(z)
+    out = L.linear(params["out_proj"], y)
+    new_cache = {"conv": new_conv, "h": h_last}
+    return out, new_cache
+
+
+def mamba_cache_spec(cfg, batch: int):
+    s = cfg.ssm
+    di, n = cfg.d_inner, s.state_dim
+    return {"conv": ((batch, s.d_conv - 1, di), L.dt(cfg.dtype)),
+            "h": ((batch, di, n), jnp.float32)}

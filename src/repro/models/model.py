@@ -1,0 +1,274 @@
+"""Model facade: init / train forward / prefill / decode / specs.
+
+The one entry point the rest of the framework uses:
+
+    model = build_model(cfg)
+    params = model.init(key)                       # or jax.eval_shape(model.init, key)
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch, max_len)
+    logits, cache = model.decode(params, cache, tokens)
+
+VLM ('vlm') and audio ('audio') archs take STUB frontend embeddings
+("img_embeds" / "frames") in their batch — see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.segments = T.segments_of(cfg)
+        if cfg.is_encdec:
+            import dataclasses
+            enc_cfg = dataclasses.replace(
+                cfg, n_layers=cfg.n_enc_layers, attn_pattern="full",
+                global_layers=(), global_interval=0, moe=None, ssm=None,
+                arch_type="dense")
+            self.enc_cfg = enc_cfg
+            self.enc_segments = T.segments_of(enc_cfg)
+        else:
+            self.enc_cfg = None
+            self.enc_segments = ()
+
+    # ---------------- init ----------------
+    def init(self, key):
+        cfg = self.cfg
+        ks = iter(jax.random.split(key, 8 + len(self.segments) + len(self.enc_segments)))
+        params = {
+            "embed": {"w": (jax.random.normal(next(ks), (cfg.padded_vocab, cfg.d_model), jnp.float32)
+                            * (cfg.d_model ** -0.5)).astype(L.dt(cfg.dtype))},
+            "final_norm": L.init_rmsnorm(cfg.d_model),
+            "segments": [T.init_segment(next(ks), cfg, seg, cross=cfg.is_encdec)
+                         for seg in self.segments],
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.init_linear(next(ks), cfg.d_model,
+                                              cfg.padded_vocab, L.dt(cfg.dtype))
+        if cfg.arch_type == "vlm":
+            params["proj_img"] = L.init_linear(next(ks), cfg.d_model, cfg.d_model,
+                                               L.dt(cfg.dtype))
+        if cfg.is_encdec:
+            params["encoder"] = {
+                "segments": [T.init_segment(next(ks), self.enc_cfg, seg)
+                             for seg in self.enc_segments],
+                "final_norm": L.init_rmsnorm(cfg.d_model),
+            }
+        return params
+
+    # ---------------- shared pieces ----------------
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], tokens, axis=0)
+        x = x.astype(L.dt(cfg.dtype)) * jnp.asarray(
+            math.sqrt(cfg.d_model), L.dt(cfg.dtype))
+        return sharding.logical(x, "batch", "seq", "embed")
+
+    def _inputs_full(self, params, batch):
+        """Token embeddings (+ prepended stub-modality embeddings)."""
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"])
+        n_prefix = 0
+        if cfg.arch_type == "vlm":
+            img = L.linear(params["proj_img"], batch["img_embeds"].astype(x.dtype))
+            x = jnp.concatenate([img, x], axis=1)
+            n_prefix = img.shape[1]
+        return x, n_prefix
+
+    def _encode(self, params, frames):
+        x = frames.astype(L.dt(self.cfg.dtype))
+        x, _, _ = T.run_stack_full(self.enc_segments, params["encoder"]["segments"],
+                                   x, self.enc_cfg, None, causal=False)
+        return L.rmsnorm(params["encoder"]["final_norm"], x,
+                         self.cfg.rms_norm_eps)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.rmsnorm(params["final_norm"], x, cfg.rms_norm_eps)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x,
+                                params["embed"]["w"].astype(x.dtype))
+        else:
+            logits = L.linear(params["lm_head"], x)
+        return sharding.logical(logits, "batch", "seq", "vocab")
+
+    # ---------------- training forward ----------------
+    def loss(self, params, batch, *, remat: bool = True,
+             loss_chunk: int = 0):
+        """Next-token cross-entropy. batch: tokens (B,S) (+stub embeds)."""
+        from repro.tuning import FLAGS
+        loss_chunk = loss_chunk or FLAGS["loss_chunk"]
+        cfg = self.cfg
+        x, n_prefix = self._inputs_full(params, batch)
+        positions = jnp.arange(x.shape[1])[None, :]
+        cross_src = self._encode(params, batch["frames"]) if cfg.is_encdec else None
+        x, _, aux = T.run_stack_full(self.segments, params["segments"], x, cfg,
+                                     positions, cross_src=cross_src,
+                                     want_cache=False, remat=remat)
+        x = L.rmsnorm(params["final_norm"], x, cfg.rms_norm_eps)
+        x = x[:, n_prefix:]                      # predict only text tokens
+        tokens = batch["tokens"]
+        inputs_x, targets = x[:, :-1], tokens[:, 1:]
+
+        head = (params["embed"]["w"].astype(x.dtype) if cfg.tie_embeddings
+                else None)
+
+        def chunk_loss(xc, tc, mc):
+            if head is not None:
+                logits = jnp.einsum("bsd,vd->bsv", xc, head)
+            else:
+                logits = L.linear(params["lm_head"], xc)
+            logits = sharding.logical(logits, "batch", "seq", "vocab")
+            logits = logits.astype(jnp.float32)
+            # mask padded vocab columns
+            if cfg.padded_vocab > cfg.vocab_size:
+                neg = jnp.full((cfg.padded_vocab - cfg.vocab_size,), -1e30)
+                logits = logits.at[..., cfg.vocab_size:].set(neg)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+            return jnp.sum((lse - gold) * mc)
+
+        s = inputs_x.shape[1]
+        n_chunks = max(1, -(-s // loss_chunk))
+        pad = n_chunks * loss_chunk - s
+        if pad:
+            inputs_x = jnp.pad(inputs_x, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        xs = inputs_x.reshape(inputs_x.shape[0], n_chunks, loss_chunk, -1).swapaxes(0, 1)
+        ts = targets.reshape(targets.shape[0], n_chunks, loss_chunk).swapaxes(0, 1)
+        mask = (jnp.arange(n_chunks * loss_chunk) < s).reshape(n_chunks, loss_chunk)
+
+        def body(tot, inp):
+            xc, tc, mc = inp
+            return tot + chunk_loss(xc, tc * mc, mc), None
+
+        total, _ = T._scan_segment(body, jnp.zeros((), jnp.float32),
+                                   (xs, ts, mask), remat=remat)
+        # padded positions contribute lse(masked logits) - logit[0]; remove via mask
+        # (we instead recompute exactly: mask inside)
+        n_tok = inputs_x.shape[0] * s
+        loss = total / n_tok
+        metrics = {"loss": loss, "aux_loss": aux}
+        if self.cfg.moe is not None:
+            loss = loss + self.cfg.moe.aux_loss_weight * aux
+        return loss, metrics
+
+    # ---------------- prefill ----------------
+    def prefill(self, params, batch, *, max_len: Optional[int] = None):
+        """Run the full prompt; return (last-token logits, decode cache)."""
+        cfg = self.cfg
+        x, n_prefix = self._inputs_full(params, batch)
+        s_total = x.shape[1]
+        max_len = max_len or s_total
+        positions = jnp.arange(s_total)[None, :]
+        cross_src = self._encode(params, batch["frames"]) if cfg.is_encdec else None
+        x, seg_ys, _ = T.run_stack_full(self.segments, params["segments"], x,
+                                        cfg, positions, cross_src=cross_src,
+                                        want_cache=True)
+        logits = self._logits(params, x[:, -1:])
+        cache = self._cache_from_prefill(seg_ys, s_total, max_len)
+        return logits, cache
+
+    def _cache_from_prefill(self, seg_ys, s: int, max_len: int):
+        cfg = self.cfg
+        segs = []
+        for seg, ys in zip(self.segments, seg_ys):
+            c = {}
+            if "k" in ys:
+                sc = self._seg_cache_len(seg, max_len)
+                for name in ("k", "v"):
+                    kv = ys[name]                       # (Lseg,B,S,KV,hd)
+                    lseg, b = kv.shape[:2]
+                    buf = jnp.zeros((lseg, b, sc) + kv.shape[3:], kv.dtype)
+                    n_keep = min(s, sc)
+                    last = kv[:, :, s - n_keep:]
+                    slots = (jnp.arange(s - n_keep, s)) % sc
+                    buf = buf.at[:, :, slots].set(last)
+                    c[name] = buf
+            if "ck" in ys:
+                c["ck"], c["cv"] = ys["ck"], ys["cv"]
+            if "conv" in ys:
+                c["conv"], c["h"] = ys["conv"], ys["h"]
+            segs.append(c)
+        return {"pos": jnp.asarray(s, jnp.int32), "segments": segs}
+
+    # ---------------- decode ----------------
+    def decode(self, params, cache, tokens):
+        """One decode step. tokens: (B, 1) int32. Returns (logits, cache)."""
+        x = self._embed(params, tokens)
+        pos = cache["pos"]
+        x, new_cache = T.run_stack_decode(self.segments, params["segments"],
+                                          x, cache, self.cfg, pos)
+        logits = self._logits(params, x)
+        return logits, new_cache
+
+    # ---------------- specs (dry-run; no allocation) ----------------
+    def _seg_cache_len(self, seg: T.Segment, ctx: int) -> int:
+        if seg.is_global or self.cfg.attn_pattern == "full":
+            return ctx
+        return min(self.cfg.sliding_window, ctx)
+
+    def cache_spec(self, batch: int, ctx: int):
+        from repro.tuning import FLAGS
+        cfg = self.cfg
+        dt_ = L.dt(cfg.dtype)
+        kv_int8 = FLAGS["kv_cache_dtype"] == "int8"
+        kv_dt = jnp.int8 if kv_int8 else dt_
+        hd = cfg.resolved_head_dim
+        segs = []
+        for seg in self.segments:
+            c = {}
+            if cfg.has_attention:
+                sc = self._seg_cache_len(seg, ctx)
+                shp = (seg.length, batch, sc, cfg.n_kv_heads, hd)
+                c["k"] = jax.ShapeDtypeStruct(shp, kv_dt)
+                c["v"] = jax.ShapeDtypeStruct(shp, kv_dt)
+                if kv_int8:
+                    c["k_s"] = jax.ShapeDtypeStruct(shp[:-1], jnp.float32)
+                    c["v_s"] = jax.ShapeDtypeStruct(shp[:-1], jnp.float32)
+            if cfg.is_encdec:
+                shp = (seg.length, batch, cfg.enc_seq, cfg.n_kv_heads, hd)
+                c["ck"] = jax.ShapeDtypeStruct(shp, dt_)
+                c["cv"] = jax.ShapeDtypeStruct(shp, dt_)
+            if cfg.ssm is not None:
+                c["conv"] = jax.ShapeDtypeStruct(
+                    (seg.length, batch, cfg.ssm.d_conv - 1, cfg.d_inner), dt_)
+                c["h"] = jax.ShapeDtypeStruct(
+                    (seg.length, batch, cfg.d_inner, cfg.ssm.state_dim),
+                    jnp.float32)
+            segs.append(c)
+        return {"pos": jax.ShapeDtypeStruct((), jnp.int32), "segments": segs}
+
+    def input_specs(self, shape):
+        """ShapeDtypeStruct stand-ins for every model input of an
+        InputShape (repro.configs.INPUT_SHAPES entry)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt_ = L.dt(cfg.dtype)
+        if shape.kind in ("train", "prefill"):
+            s_text = s - (cfg.n_img_tokens if cfg.arch_type == "vlm" else 0)
+            spec = {"tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32)}
+            if cfg.arch_type == "vlm":
+                spec["img_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_img_tokens, cfg.d_model), dt_)
+            if cfg.is_encdec:
+                spec["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.enc_seq, cfg.d_model), dt_)
+            return spec
+        # decode: one token against a ctx-length cache
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "cache": self.cache_spec(b, s)}
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

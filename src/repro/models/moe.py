@@ -1,0 +1,146 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based scatter dispatch.
+
+Expert-parallel design (DESIGN.md §7): dispatched activations are laid out
+(B, E, C, D) so that constraining E to the 'model' mesh axis turns the
+dispatch/combine reshards into all-to-alls, while expert weights live
+one-per-rank (E sharded over 'model'). Capacity per batch row
+C = ceil(S * top_k / E * capacity_factor); overflowing tokens are dropped
+(Switch/GShard semantics) and the router aux loss keeps load balanced.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, m.n_experts
+    dtype = L.dt(cfg.dtype)
+    def ew(k, din, dout, scale):
+        w = jax.random.normal(k, (e, din, dout), jnp.float32) * scale
+        if cfg.quant == "int8":
+            s = jnp.max(jnp.abs(w), axis=1, keepdims=True) / 127.0 + 1e-8
+            wq = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
+            return {"w_q": wq, "s": s.astype(jnp.float32)}
+        return {"w": w.astype(dtype)}
+    return {
+        "router": L.init_linear(ks[0], d, e, jnp.float32),  # router in f32
+        "w_gate": ew(ks[1], d, f, d ** -0.5),
+        "w_up": ew(ks[2], d, f, d ** -0.5),
+        "w_down": ew(ks[3], f, d, (f * max(1, 2 * cfg.n_layers)) ** -0.5),
+    }
+
+
+def _expert_matmul(p, x):
+    """x: (B,E,C,Din) @ per-expert weights (E,Din,Dout)."""
+    if "w_q" in p:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32) + 1e-8
+        sx = amax / 127.0
+        xq = jnp.clip(jnp.round(x.astype(jnp.float32) / sx), -127, 127).astype(jnp.int8)
+        acc = jnp.einsum("beci,eio->beco", xq, p["w_q"],
+                         preferred_element_type=jnp.int32)
+        return (acc.astype(jnp.float32) * sx * p["s"][None]).astype(x.dtype)
+    return jnp.einsum("beci,eio->beco", x, p["w"].astype(x.dtype))
+
+
+def capacity(seq: int, top_k: int, n_experts: int, cf: float) -> int:
+    return max(1, int(-(-seq * top_k * cf // n_experts)))
+
+
+def moe_block(params, x, cfg, *, shard_experts=None):
+    """x: (B, S, D) -> (B, S, D), aux: dict with load-balance loss.
+
+    shard_experts: optional callable applying a sharding constraint to the
+    dispatched (B,E,C,D) tensors (injected by distributed/sharding.py).
+    """
+    from repro.tuning import FLAGS
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    cap = capacity(s, k, e, FLAGS["moe_cf"] or m.capacity_factor)
+
+    logits = L.linear(params["router"], x.astype(jnp.float32))      # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)                 # (B,S,k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    # Load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))                               # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[..., 0], e), axis=(0, 1))
+    aux_loss = e * jnp.sum(me * ce)
+
+    # Position of each (token, slot) within its expert, per batch row.
+    flat_ids = expert_ids.reshape(b, s * k)                         # (B,T)
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)           # (B,T,E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot                  # (B,T,E)
+    pos = jnp.take_along_axis(
+        pos_in_e, flat_ids[..., None], axis=2)[..., 0]              # (B,T)
+    keep = pos < cap
+
+    # Dispatch: per-row scatter into (E, C, D), vmapped over the batch so
+    # the batch becomes a true scatter batching dim — GSPMD keeps B
+    # sharded over 'data' and reshards only E to 'model' (the expert-
+    # parallel exchange). Out-of-capacity entries fall out via
+    # mode='drop' (Switch/GShard token dropping).
+    xk = jnp.broadcast_to(x[:, :, None, :], (b, s, k, d)).reshape(b, s * k, d)
+
+    def _scatter_row(xrow, ids, prow):
+        return jnp.zeros((e, cap, d), x.dtype).at[ids, prow].set(
+            xrow, mode="drop")
+
+    dispatched = jax.vmap(_scatter_row)(xk, flat_ids, pos)          # (B,E,C,D)
+    if shard_experts is not None:
+        dispatched = shard_experts(dispatched)
+
+    # Expert weights: experts stay sharded over 'model'; the matrix dims
+    # are FSDP-stored but must be gathered (constraint to replicated)
+    # before use so GSPMD gathers the (small) weights instead of
+    # all-reducing the (huge) dispatched activations.
+    def _gathered(p):
+        key = "w_q" if "w_q" in p else "w"
+        from repro.distributed import sharding as _sh
+        q = dict(p)
+        q[key] = _sh.logical(p[key], "expert", None, None)
+        return q
+
+    h = jax.nn.silu(_expert_matmul(_gathered(params["w_gate"]), dispatched))
+    h = h * _expert_matmul(_gathered(params["w_up"]), dispatched)
+    out_e = _expert_matmul(_gathered(params["w_down"]), h)          # (B,E,C,D)
+    if shard_experts is not None:
+        out_e = shard_experts(out_e)
+
+    # Combine: per-row gather of each (token, slot)'s expert output.
+    def _gather_row(oe, ids, prow):
+        return oe[ids, jnp.minimum(prow, cap - 1)]
+
+    gathered = jax.vmap(_gather_row)(out_e, flat_ids, pos)          # (B,T,D)
+    w = (gate_vals.reshape(b, s * k) * keep).astype(x.dtype)
+    y = (gathered * w[..., None]).reshape(b, s, k, d).sum(axis=2)
+    return y, {"aux_loss": aux_loss,
+               "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+
+
+def moe_block_dense_ref(params, x, cfg):
+    """Oracle: every token through its top-k experts with NO capacity drop
+    (dense einsum over all experts). Used by tests to validate dispatch."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    logits = L.linear(params["router"], x.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+    comb = jnp.zeros((b, s, e), jnp.float32)
+    comb = jnp.sum(jax.nn.one_hot(expert_ids, e) * gate_vals[..., None], axis=2)
+
+    def one_expert(wg, wu, wd):
+        h = jax.nn.silu(x @ wg.astype(x.dtype)) * (x @ wu.astype(x.dtype))
+        return h @ wd.astype(x.dtype)
+    ys = jax.vmap(one_expert, in_axes=0, out_axes=0)(
+        params["w_gate"]["w"], params["w_up"]["w"], params["w_down"]["w"])
+    y = jnp.einsum("ebsd,bse->bsd", ys.astype(jnp.float32), comb)
+    return y.astype(x.dtype)

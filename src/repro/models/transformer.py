@@ -1,0 +1,340 @@
+"""Decoder / encoder-decoder stacks with scan-over-layers.
+
+Layers are grouped into homogeneous SEGMENTS (contiguous runs sharing the
+same attention kind: global vs sliding). Each segment's params/caches are
+stacked on a leading axis and executed with lax.scan, so mixed patterns
+(gemma3's 5:1 local:global, hymba's 3 global layers) get exact per-kind
+code paths — no lax.cond double-compute polluting the roofline — while
+keeping the HLO O(#segments), not O(#layers).
+
+Cache layout (pytree):
+  {"pos": (), "segments": [seg_cache, ...], ("cross": ..., for enc-dec)}
+  attn seg_cache: {"k","v": (Lseg, B, Sc, KV, hd)} with Sc = full context
+    for global segments, min(window, ctx) ring buffer for sliding ones.
+  ssm/hybrid add {"conv": (Lseg, B, K-1, di), "h": (Lseg, B, di, N)}.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+
+
+# ---------------------------------------------------------------------------
+# Segments
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    start: int
+    length: int
+    is_global: bool
+
+
+def segments_of(cfg) -> tuple:
+    mask = cfg.global_layer_mask()
+    segs = []
+    i = 0
+    for j in range(1, cfg.n_layers + 1):
+        if j == cfg.n_layers or mask[j] != mask[i]:
+            segs.append(Segment(i, j - i, mask[i]))
+            i = j
+    return tuple(segs)
+
+
+def seg_window(cfg, seg: Segment, ctx: int) -> int:
+    """Effective attention window of a segment (0 = unlimited/global)."""
+    if not cfg.has_attention:
+        return 0
+    return 0 if seg.is_global else cfg.sliding_window
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init (vmapped into stacked segment params)
+
+
+def _init_layer(key, cfg, *, cross: bool = False, causal: bool = True):
+    ks = jax.random.split(key, 8)
+    p = {"ln1": L.init_rmsnorm(cfg.d_model)}
+    if cfg.arch_type == "ssm":
+        p["ssm"] = M.init_mamba(ks[0], cfg)
+        return p
+    p["attn"] = L.init_attention(ks[0], cfg)
+    if cfg.arch_type == "hybrid":
+        p["ssm"] = M.init_mamba(ks[1], cfg)
+        p["ln_attn_out"] = L.init_rmsnorm(cfg.d_model)
+        p["ln_ssm_out"] = L.init_rmsnorm(cfg.d_model)
+    if cross:
+        p["cross"] = L.init_attention(ks[2], cfg)
+        p["ln_cross"] = L.init_rmsnorm(cfg.d_model)
+    if cfg.moe is not None:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model)
+        p["moe"] = MOE.init_moe(ks[3], cfg)
+    elif cfg.has_mlp:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model)
+        p["mlp"] = L.init_mlp(ks[3], cfg)
+    return p
+
+
+def init_segment(key, cfg, seg: Segment, **kw):
+    keys = jax.random.split(key, seg.length)
+    return jax.vmap(lambda k: _init_layer(k, cfg, **kw))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Layer application — full-sequence (train / prefill)
+
+
+def _mixer_full(p, h, cfg, window: int, positions, *, causal: bool = True,
+                return_kv: bool = False):
+    """Attention (+parallel SSM for hybrid) over a full sequence."""
+    outs = []
+    kv = None
+    if cfg.has_attention:
+        q, k, v = L.attention_qkv(p["attn"], h, cfg, positions,
+                                  rope=(cfg.rope_theta > 0))
+        q = sharding.logical(q, "batch", "seq", "heads", None)
+        k = sharding.logical(k, "batch", "seq", "kv_heads", None)
+        v = sharding.logical(v, "batch", "seq", "kv_heads", None)
+        from repro.tuning import FLAGS
+        if not causal:
+            o = L.chunked_attention(q, k, v, causal=False,
+                                    chunk=FLAGS["attn_chunk"],
+                                    softcap=cfg.logit_softcap)
+        elif window and h.shape[1] > window:
+            o = L.local_banded_attention(q, k, v, window=window,
+                                         softcap=cfg.logit_softcap)
+        else:
+            o = L.chunked_attention(q, k, v, causal=True, window=window,
+                                    chunk=FLAGS["attn_chunk"],
+                                    softcap=cfg.logit_softcap)
+        o = sharding.logical(o, "batch", "seq", "heads", None)
+        attn_out = L.linear(p["attn"]["wo"], o.reshape(*h.shape[:2], -1))
+        outs.append(("attn", attn_out))
+        if return_kv:
+            kv = (k, v)
+    ssm_cache = None
+    if "ssm" in p:
+        ssm_out, ssm_cache = M.mamba_block(p["ssm"], h, cfg)
+        outs.append(("ssm", ssm_out))
+    if cfg.arch_type == "hybrid":
+        a = L.rmsnorm(p["ln_attn_out"], dict(outs)["attn"], cfg.rms_norm_eps)
+        s = L.rmsnorm(p["ln_ssm_out"], dict(outs)["ssm"], cfg.rms_norm_eps)
+        mixed = 0.5 * (a + s)
+    else:
+        mixed = outs[0][1]
+    return mixed, kv, ssm_cache
+
+
+def _ffn(p, x, cfg):
+    if "moe" in p:
+        h = L.rmsnorm(p["ln2"], x, cfg.rms_norm_eps)
+        y, aux = MOE.moe_block(p["moe"], h, cfg,
+                               shard_experts=sharding.shard_moe_dispatch)
+        return x + y, aux["aux_loss"]
+    if "mlp" in p:
+        h = L.rmsnorm(p["ln2"], x, cfg.rms_norm_eps)
+        h = sharding.logical(h, "batch", "seq", "embed")
+        return x + L.mlp(p["mlp"], h, cfg.mlp_act), 0.0
+    return x, 0.0
+
+
+def layer_full(p, x, cfg, window: int, positions, *, causal: bool = True,
+               cross_src=None, return_kv: bool = False):
+    """One decoder layer over a full sequence.
+
+    cross_src: encoder output (B, S_enc, D) for enc-dec decoders; each layer
+    projects its own cross K/V (returned for caching when return_kv).
+    Returns (x, kv, cross_kv, ssm_cache, aux).
+    """
+    hd = cfg.resolved_head_dim
+    h = L.rmsnorm(p["ln1"], x, cfg.rms_norm_eps)
+    mixed, kv, ssm_cache = _mixer_full(p, h, cfg, window, positions,
+                                       causal=causal, return_kv=return_kv)
+    x = x + mixed
+    cross_kv = None
+    if cross_src is not None and "cross" in p:
+        hc = L.rmsnorm(p["ln_cross"], x, cfg.rms_norm_eps)
+        b, se = cross_src.shape[:2]
+        ck = L.linear(p["cross"]["wk"], cross_src).reshape(b, se, cfg.n_kv_heads, hd)
+        cv = L.linear(p["cross"]["wv"], cross_src).reshape(b, se, cfg.n_kv_heads, hd)
+        qc = L.linear(p["cross"]["wq"], hc).reshape(
+            *hc.shape[:2], cfg.n_heads, hd)
+        oc = L.chunked_attention(qc, ck, cv, causal=False)
+        x = x + L.linear(p["cross"]["wo"], oc.reshape(*hc.shape[:2], -1))
+        cross_kv = (ck, cv)
+    x, aux = _ffn(p, x, cfg)
+    x = sharding.logical(x, "batch", "seq", "embed")
+    return x, kv, cross_kv, ssm_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Layer application — single-token decode
+
+
+def layer_decode(p, x, cache_l, cfg, window: int, pos):
+    """One decoder layer for one token. cache_l holds this layer's slices
+    (incl. per-layer cross K/V "ck"/"cv" for enc-dec models).
+
+    pos: scalar int32 absolute position of the incoming token.
+    Returns (x, new_cache_l).
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    h = L.rmsnorm(p["ln1"], x, cfg.rms_norm_eps)
+    new_cache = {}
+    outs = []
+    if cfg.has_attention:
+        positions = jnp.full((b, 1), pos)
+        q, k, v = L.attention_qkv(p["attn"], h, cfg, positions,
+                                  rope=(cfg.rope_theta > 0))
+        kc, vc = cache_l["k"], cache_l["v"]          # (B, Sc, KV, hd)
+        sc = kc.shape[1]
+        slot = pos % sc
+        int8_cache = "k_s" in cache_l
+        if int8_cache:
+            # quantize the new K/V rows (per slot-head symmetric scale)
+            def _q(row):
+                amax = jnp.max(jnp.abs(row.astype(jnp.float32)), -1) + 1e-8
+                sc_ = amax / 127.0                      # (B,1,KV)
+                rq = jnp.clip(jnp.round(row.astype(jnp.float32)
+                                        / sc_[..., None]), -127, 127)
+                return rq.astype(jnp.int8), sc_
+            kq, ks_new = _q(k)
+            vq, vs_new = _q(v)
+            kc = jax.lax.dynamic_update_slice(kc, kq, (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, vq, (0, slot, 0, 0))
+            ks = jax.lax.dynamic_update_slice(cache_l["k_s"], ks_new,
+                                              (0, slot, 0))
+            vs = jax.lax.dynamic_update_slice(cache_l["v_s"], vs_new,
+                                              (0, slot, 0))
+            k_read = (kc.astype(jnp.float32) * ks[..., None]).astype(k.dtype)
+            v_read = (vc.astype(jnp.float32) * vs[..., None]).astype(v.dtype)
+            new_cache.update(k=kc, v=vc, k_s=ks, v_s=vs)
+        else:
+            kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+            k_read, v_read = kc, vc
+            new_cache.update(k=kc, v=vc)
+        # absolute position held by each ring slot after the write
+        idx = jnp.arange(sc)
+        kv_pos = pos - (pos - idx) % sc
+        o = L.decode_attention(q, k_read, v_read,
+                               kv_pos[None, :].repeat(b, 0),
+                               jnp.full((b,), pos), window=window,
+                               softcap=cfg.logit_softcap)
+        attn_out = L.linear(p["attn"]["wo"], o.reshape(b, 1, -1))
+        outs.append(("attn", attn_out))
+    if "ssm" in p:
+        ssm_out, ssm_new = M.mamba_block(
+            p["ssm"], h, cfg, cache={"conv": cache_l["conv"], "h": cache_l["h"]})
+        outs.append(("ssm", ssm_out))
+        new_cache.update(conv=ssm_new["conv"], h=ssm_new["h"])
+    if cfg.arch_type == "hybrid":
+        a = L.rmsnorm(p["ln_attn_out"], dict(outs)["attn"], cfg.rms_norm_eps)
+        s = L.rmsnorm(p["ln_ssm_out"], dict(outs)["ssm"], cfg.rms_norm_eps)
+        mixed = 0.5 * (a + s)
+    else:
+        mixed = outs[0][1]
+    x = x + mixed
+    if "cross" in p and "ck" in cache_l:
+        hc = L.rmsnorm(p["ln_cross"], x, cfg.rms_norm_eps)
+        ck, cv = cache_l["ck"], cache_l["cv"]
+        qc = L.linear(p["cross"]["wq"], hc).reshape(b, 1, cfg.n_heads, hd)
+        npos = jnp.arange(ck.shape[1])
+        oc = L.decode_attention(qc, ck, cv, npos[None, :].repeat(b, 0),
+                                jnp.full((b,), ck.shape[1]))
+        x = x + L.linear(p["cross"]["wo"], oc.reshape(b, 1, -1))
+        new_cache.update(ck=ck, cv=cv)
+    x, _ = _ffn(p, x, cfg)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+
+
+# Dry-run roofline mode: XLA's cost_analysis counts a lax.scan body ONCE
+# (not x trip-count), so the launch/dryrun.py sets UNROLL_SEGMENTS=True to
+# unroll the layer loop and get exact per-op FLOP/byte/collective counts.
+# Runtime (training/serving) keeps the scan for O(1) HLO size.
+UNROLL_SEGMENTS = False
+
+
+def _scan_segment(body, x, seg_params, seg_xs=None, *, remat: bool = False):
+    from repro.tuning import FLAGS
+    if remat and FLAGS["remat_policy"] == "dots":
+        f = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif remat:
+        f = jax.checkpoint(body)
+    else:
+        f = body
+    xs = seg_params if seg_xs is None else (seg_params, seg_xs)
+    if not UNROLL_SEGMENTS:
+        return jax.lax.scan(f, x, xs)
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x, y = f(x, jax.tree_util.tree_map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    return x, stacked
+
+
+def run_stack_full(segments, seg_params_list, x, cfg, ctx_positions, *,
+                   causal=True, cross_src=None, want_cache: bool = False,
+                   remat: bool = False):
+    """Full-sequence pass over all segments.
+
+    Returns (x, per_segment_cache_ys_or_None, total_aux_loss).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    seg_caches = []
+    for seg, seg_params in zip(segments, seg_params_list):
+        window = seg_window(cfg, seg, x.shape[1])
+
+        def body(carry, p, _window=window):
+            xx, aux = carry
+            xx, kv, cross_kv, ssm_c, aux_l = layer_full(
+                p, xx, cfg, _window, ctx_positions, causal=causal,
+                cross_src=cross_src, return_kv=want_cache)
+            ys = {}
+            if want_cache and kv is not None:
+                ys["k"], ys["v"] = kv
+            if want_cache and cross_kv is not None:
+                ys["ck"], ys["cv"] = cross_kv
+            if want_cache and ssm_c is not None:
+                ys["conv"], ys["h"] = ssm_c["conv"], ssm_c["h"]
+            return (xx, aux + aux_l), ys
+
+        (x, aux_total), ys = _scan_segment(body, (x, aux_total), seg_params,
+                                           remat=remat)
+        seg_caches.append(ys if want_cache else None)
+    return x, seg_caches, aux_total
+
+
+def run_stack_decode(segments, seg_params_list, x, cache, cfg, pos):
+    """Single-token pass. cache: {'pos', 'segments': [stacked seg caches]}."""
+    new_segs = []
+    for seg, seg_params, seg_cache in zip(segments, seg_params_list,
+                                          cache["segments"]):
+        window = seg_window(cfg, seg, None)
+
+        def body(xx, pc, _window=window):
+            p, c = pc
+            xx, new_c = layer_decode(p, xx, c, cfg, _window, pos)
+            return xx, new_c
+
+        x, new_c = _scan_segment(body, x, (seg_params, seg_cache))
+        new_segs.append(new_c)
+    return x, {"pos": pos + 1, "segments": new_segs}

@@ -1,0 +1,2 @@
+from repro.serving.engine import ServingEngine
+from repro.serving.batching import Request, RequestBatcher

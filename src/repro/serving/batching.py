@@ -1,0 +1,54 @@
+"""Request batching: pad/pack incoming requests into fixed-shape batches
+so the jitted prefill/decode executables are reused across traffic."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    user: int = 0                   # originating end-node (orchestration)
+    arrival_time: float = 0.0
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    response_time: float = 0.0
+
+
+class RequestBatcher:
+    """Greedy fixed-size batcher with right-padding to a bucket length."""
+
+    def __init__(self, batch_size: int, buckets=(32, 64, 128, 256)):
+        self.batch_size = batch_size
+        self.buckets = tuple(sorted(buckets))
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def next_batch(self):
+        """Pop up to batch_size requests; returns (requests, tokens, lengths)
+        with tokens right-padded to a shared bucket length."""
+        if not self.queue:
+            return None
+        reqs = self.queue[: self.batch_size]
+        self.queue = self.queue[self.batch_size:]
+        max_len = self._bucket(max(len(r.prompt) for r in reqs))
+        toks = np.zeros((len(reqs), max_len), np.int32)
+        lens = np.zeros((len(reqs),), np.int32)
+        for i, r in enumerate(reqs):
+            p = r.prompt[-max_len:]
+            toks[i, :len(p)] = p
+            lens[i] = len(p)
+        return reqs, toks, lens

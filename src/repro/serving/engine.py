@@ -1,0 +1,70 @@
+"""Serving engine: jitted prefill + decode loop over a Model.
+
+This is the "Intelligent Service" of the paper (Fig. 4): each tier
+(device / edge / cloud) hosts one engine per model variant; the
+orchestrator routes requests to (tier, variant). Executables are cached
+per (batch, bucket-length) so steady-state traffic never re-traces.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.batching import Request, RequestBatcher
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, max_len: int = 512,
+                 compute_scale: float = 1.0):
+        """compute_scale < 1 emulates a slower tier in the end-edge-cloud
+        example (wall-time multiplied post-hoc); 1.0 = measure raw."""
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.compute_scale = compute_scale
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=max_len))
+        self._decode = jax.jit(model.decode)
+        self._compiled: Dict[Tuple[int, int], bool] = {}
+
+    def warmup(self, batch: int, prompt_len: int):
+        toks = jnp.zeros((batch, prompt_len), jnp.int32)
+        logits, cache = self._prefill(self.params, {"tokens": toks})
+        self._decode(self.params, cache, jnp.zeros((batch, 1), jnp.int32))
+        self._compiled[(batch, prompt_len)] = True
+
+    def generate(self, tokens: np.ndarray, max_new_tokens: int = 16,
+                 greedy: bool = True):
+        """tokens: (B, S) int32 -> (out_tokens (B, N), wall_seconds)."""
+        t0 = time.perf_counter()
+        toks = jnp.asarray(tokens, jnp.int32)
+        logits, cache = self._prefill(self.params, {"tokens": toks})
+        outs = []
+        cur = jnp.argmax(logits[:, -1:, : self.model.cfg.vocab_size], -1)
+        cur = cur.astype(jnp.int32)
+        for _ in range(max_new_tokens):
+            outs.append(cur)
+            logits, cache = self._decode(self.params, cache, cur)
+            cur = jnp.argmax(logits[:, -1:, : self.model.cfg.vocab_size],
+                             -1).astype(jnp.int32)
+        out = jnp.concatenate(outs, axis=1)
+        out.block_until_ready()
+        wall = (time.perf_counter() - t0) / self.compute_scale
+        return np.asarray(out), wall
+
+    def serve(self, batcher: RequestBatcher):
+        """Drain one batch from the batcher; fills response_time/output."""
+        nxt = batcher.next_batch()
+        if nxt is None:
+            return []
+        reqs, toks, _lens = nxt
+        out, wall = self.generate(toks, max_new_tokens=reqs[0].max_new_tokens)
+        for i, r in enumerate(reqs):
+            r.output = out[i]
+            r.response_time = wall
+        return reqs

@@ -1,0 +1,2 @@
+from repro.training.optimizer import AdamWConfig, apply_updates, init_opt_state
+from repro.training.train_step import init_state, make_train_step

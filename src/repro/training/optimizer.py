@@ -1,0 +1,84 @@
+"""AdamW + gradient clipping + schedules, in pure JAX (no optax dep).
+
+State is a pytree mirroring params: {"m": ..., "v": ..., "step": ()}.
+Moments are f32 regardless of param dtype (mixed-precision training with
+bf16 params). All ops are elementwise -> the optimizer inherits the
+parameter sharding (FSDP) with no extra collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(1, cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _is_matrix(p):
+    return p.ndim >= 2
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay and _is_matrix(p):
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,34 @@
+"""Training step: loss -> grads -> AdamW update (the function lowered by
+the train_4k dry-run shape)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import AdamWConfig, apply_updates, init_opt_state
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, *, remat: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics) where
+    state = {"params", "opt"}. Suitable for jax.jit with shardings."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, remat=remat)
+        return loss, metrics
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch)
+        params, opt, opt_metrics = apply_updates(state["params"], grads,
+                                                 state["opt"], opt_cfg)
+        metrics = dict(metrics, **opt_metrics, total_loss=loss)
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def init_state(model, key):
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params)}

@@ -1,0 +1,25 @@
+"""Performance-tuning flags for the §Perf hillclimb (EXPERIMENTS.md).
+
+Defaults = the paper-faithful / straightforward baseline. The dry-run CLI
+and benchmarks flip these per iteration so before/after pairs are
+attributable to exactly one change.
+"""
+FLAGS = {
+    # decode: donate the KV cache so updates alias in place (no copy)
+    "donate_cache": False,
+    # mamba: chunked selective scan (0 = full associative scan baseline);
+    # bounds the materialized (B, S, d_inner, N) state to chunk length
+    "mamba_chunk": 0,
+    # training loss: sequence chunk for the logits/CE scan
+    "loss_chunk": 512,
+    # attention: KV chunk for the online-softmax scan
+    "attn_chunk": 1024,
+    # decode KV cache storage dtype: "bf16" | "int8" (per-slot-head
+    # symmetric scales; halves decode HBM traffic)
+    "kv_cache_dtype": "bf16",
+    # MoE capacity factor override (0.0 = use the config's value)
+    "moe_cf": 0.0,
+    # layer remat policy: "full" (recompute everything) | "dots"
+    # (save matmul outputs, recompute elementwise) — memory<->HBM trade
+    "remat_policy": "full",
+}

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# smoke tests / benches see the single real CPU device; ONLY the dry-run
+# (launch/dryrun.py, run as its own process) forces 512 host devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,134 @@
+"""Paper-core tests: environment calibration, brute-force oracle, agent
+convergence to the optimum (claim C1), speedup vs SOTA (C2), fixed
+strategies (C3), and transfer learning (C5)."""
+import numpy as np
+import pytest
+
+from repro.core import (EXPERIMENTS, THRESHOLDS, DQNAgent, DQNConfig,
+                        EndEdgeCloudEnv, QLearningAgent, QLearningConfig,
+                        bruteforce_complexity, bruteforce_optimal,
+                        fixed_strategy_response, make_sota_agent,
+                        train_agent, transfer_experiment)
+from repro.core.spaces import SpaceSpec, restricted_actions
+
+
+# ---------------------------------------------------------------- env ------
+def test_env_calibration_anchors():
+    env = EndEdgeCloudEnv(5, EXPERIMENTS["EXP-A"], noise=0)
+    enc = env.spec.encode_action
+    # paper Fig.5 / Tables 8-9 anchors (ms), tolerance 10%
+    anchors = [
+        (enc([7] * 5), 72.08),           # Min threshold row
+        (enc([8] * 5), 1140.0),          # edge-only @5
+        (enc([9] * 5), 665.0),           # cloud-only @5
+    ]
+    for a, want in anchors:
+        got, _ = env.expected_response(a)
+        assert abs(got - want) / want < 0.10, (a, got, want)
+    env1 = EndEdgeCloudEnv(1, EXPERIMENTS["EXP-A"], noise=0)
+    got, _ = env1.expected_response(env1.spec.encode_action([9]))
+    assert abs(got - 363.47) < 15
+
+
+def test_env_scalar_batch_consistency():
+    env = EndEdgeCloudEnv(3, EXPERIMENTS["EXP-B"], noise=0)
+    acts = np.random.default_rng(0).integers(0, env.spec.n_joint_actions, 64)
+    ms, acc = env.expected_response_batch(acts)
+    for i, a in enumerate(acts):
+        m1, a1 = env.expected_response(int(a))
+        assert abs(m1 - ms[i]) < 1e-6 and abs(a1 - acc[i]) < 1e-9
+
+
+def test_reward_structure():
+    """Eq. 4: constraint violation -> minimum reward."""
+    env = EndEdgeCloudEnv(2, EXPERIMENTS["EXP-A"], accuracy_threshold=89.0,
+                          seed=0, noise=0)
+    _, r_ok, info = env.step(env.spec.encode_action([0, 0]))     # d0 = 89.9
+    assert not info["violated"] and r_ok > -2.5
+    _, r_bad, info = env.step(env.spec.encode_action([7, 7]))    # 72.8 < 89
+    assert info["violated"] and r_bad == -2.5
+
+
+def test_bruteforce_structure_matches_paper_table9():
+    env = EndEdgeCloudEnv(5, EXPERIMENTS["EXP-A"], noise=0)
+    # Min -> all d7 local; 89% -> 4x d4 local + one d0 offload (Table 9)
+    a, ms, acc, _ = bruteforce_optimal(env, THRESHOLDS["Min"])
+    assert env.spec.decode_action(a) == (7,) * 5
+    a, ms, acc, _ = bruteforce_optimal(env, THRESHOLDS["89%"])
+    per = env.spec.decode_action(a)
+    assert sorted(per)[:4] == [4, 4, 4, 4] and per[4] >= 8 or \
+        sum(p == 4 for p in per) == 4
+    assert abs(acc - 89.1) < 0.05
+    assert abs(ms - 269.8) / 269.8 < 0.05
+
+
+def test_bruteforce_complexity_eq6():
+    assert abs(bruteforce_complexity(5) - 4.2e12) / 4.2e12 < 0.05
+
+
+def test_speedup_claim_c2():
+    """~35% speedup vs SOTA at <0.9% accuracy loss (paper abstract)."""
+    env = EndEdgeCloudEnv(5, EXPERIMENTS["EXP-A"], noise=0)
+    _, sota_ms, sota_acc, _ = bruteforce_optimal(
+        env, 0.0, restricted_actions(env.spec))
+    _, ours_ms, ours_acc, _ = bruteforce_optimal(env, THRESHOLDS["89%"])
+    speedup = 1 - ours_ms / sota_ms
+    assert 0.25 < speedup < 0.45, speedup
+    assert sota_acc - ours_acc < 0.9
+
+
+def test_fixed_strategies_ordering_c3():
+    """Fig. 5: device-only flat; edge worst at 5 users; cloud between."""
+    for n in (1, 3, 5):
+        env = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-A"], noise=0)
+        dev, _ = fixed_strategy_response(env, "device")
+        edge, _ = fixed_strategy_response(env, "edge")
+        cloud, _ = fixed_strategy_response(env, "cloud")
+        if n == 1:
+            assert cloud < edge < dev
+        if n == 5:
+            assert dev < cloud < edge
+
+
+# ------------------------------------------------------------- agents -----
+def test_qlearning_converges_to_optimal_c1():
+    env = EndEdgeCloudEnv(2, EXPERIMENTS["EXP-A"], accuracy_threshold=89.0,
+                          seed=1)
+    agent = QLearningAgent(env.spec, seed=1)
+    res = train_agent(agent, env, max_steps=30000, check_every=200)
+    assert res.converged_at is not None
+    assert res.prediction_accuracy == 1.0
+
+
+def test_dqn_paper_form_converges():
+    env = EndEdgeCloudEnv(2, EXPERIMENTS["EXP-A"], accuracy_threshold=0.0,
+                          seed=3)
+    agent = DQNAgent(env.spec, DQNConfig(form="paper"), seed=3)
+    res = train_agent(agent, env, max_steps=8000, check_every=500)
+    assert res.converged_at is not None
+    assert res.prediction_accuracy == 1.0
+
+
+def test_sota_baseline_is_limited_to_d0():
+    spec = SpaceSpec(3)
+    acts = restricted_actions(spec)
+    assert len(acts) == 27
+    pu = spec.decode_actions_batch(acts)
+    assert set(np.unique(pu)) <= {0, 8, 9}
+
+
+def test_transfer_learning_c5():
+    def make_agent():
+        return QLearningAgent(SpaceSpec(2), QLearningConfig(eps_decay=1e-2),
+                              seed=5)
+
+    def make_env(th):
+        return EndEdgeCloudEnv(2, EXPERIMENTS["EXP-A"],
+                               accuracy_threshold=th, seed=5)
+
+    scratch, warm = transfer_experiment(make_agent, make_env,
+                                        source_threshold=0.0,
+                                        target_threshold=85.0,
+                                        max_steps=30000, check_every=100)
+    assert warm.converged_at is not None and scratch.converged_at is not None
+    assert warm.converged_at <= scratch.converged_at

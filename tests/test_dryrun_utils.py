@@ -1,0 +1,57 @@
+"""Dry-run utility tests: HLO collective parsing + roofline arithmetic
+(no 512-device mesh needed — pure text processing)."""
+import importlib
+import sys
+import types
+
+import pytest
+
+
+def _dryrun():
+    # import without triggering the XLA_FLAGS device-count override side
+    # effects twice (idempotent: appends to XLA_FLAGS only)
+    import repro.launch.dryrun as d
+    return d
+
+
+def test_collective_bytes_parsing():
+    d = _dryrun()
+    hlo = """
+  %ag = bf16[4,1024]{1,0} all-gather(bf16[1,1024]{1,0} %p), dims={0}
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %x), to_apply=%sum
+  %rs = f32[32]{0} reduce-scatter(f32[128]{0} %y), dimensions={0}
+  %a2a = (s8[16,64]{1,0}, s8[16,64]{1,0}) all-to-all(s8[16,64] %a, s8[16,64] %b)
+  %cp = bf16[8,8]{1,0} collective-permute(bf16[8,8]{1,0} %z)
+  %dot = f32[8,8]{1,0} dot(f32[8,8] %l, f32[8,8] %r)
+"""
+    out = d.collective_bytes(hlo)
+    assert out["all-gather"] == 4 * 1024 * 2
+    assert out["all-reduce"] == 128 * 4 * 2.0        # ring 2x
+    assert out["reduce-scatter"] == 32 * 4
+    assert out["all-to-all"] == 2 * 16 * 64 * 1
+    assert out["collective-permute"] == 8 * 8 * 2
+    assert "dot" not in out
+
+
+def test_shape_bytes_tuple_and_scalar():
+    d = _dryrun()
+    assert d._shape_bytes("f32[128]") == 512
+    assert d._shape_bytes("(bf16[2,2], s8[4])") == 8 + 4
+    assert d._shape_bytes("pred[]") == 1    # scalar: empty dims
+
+
+def test_long_ctx_skip_list_matches_design():
+    d = _dryrun()
+    runs = {(a, s) for a, s, st in d.pairs(include_long_skips=True)
+            if st == "run" and s == "long_500k"}
+    assert runs == {("gemma3-4b", "long_500k"), ("hymba-1.5b", "long_500k"),
+                    ("falcon-mamba-7b", "long_500k")}
+    skips = {a for a, s, st in d.pairs(include_long_skips=True)
+             if st == "skip"}
+    assert len(skips) == 7
+
+
+def test_full_matrix_is_40_pairs():
+    d = _dryrun()
+    allp = list(d.pairs(include_long_skips=True))
+    assert len(allp) == 40

@@ -1,0 +1,121 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, dtype, key):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,skv,h,kv,hd,causal,window", [
+    (2, 128, 128, 8, 2, 64, True, 0),
+    (1, 100, 100, 4, 4, 32, True, 48),     # ragged + sliding window
+    (2, 64, 192, 6, 3, 128, False, 0),     # cross attention
+    (1, 256, 256, 2, 1, 256, True, 0),     # MQA, big head
+    (3, 33, 65, 5, 5, 16, True, 0),        # odd everything
+])
+def test_flash_attention(dtype, b, sq, skv, h, kv, hd, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = _rand((b, sq, h, hd), dtype, ks[0])
+    k = _rand((b, skv, kv, hd), dtype, ks[1])
+    v = _rand((b, skv, kv, hd), dtype, ks[2])
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=32, bk=32)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,hd,s,window,bk", [
+    (3, 8, 2, 64, 300, 64, 128),
+    (1, 16, 16, 128, 1024, 0, 256),
+    (2, 4, 1, 32, 96, 0, 32),
+])
+def test_decode_attention(dtype, b, h, kv, hd, s, window, bk):
+    ks = jax.random.split(KEY, 3)
+    q = _rand((b, h, hd), dtype, ks[0])
+    kc = _rand((b, s, kv, hd), dtype, ks[1])
+    vc = _rand((b, s, kv, hd), dtype, ks[2])
+    kv_pos = jnp.tile(jnp.arange(s)[None], (b, 1))
+    cur = jnp.asarray(np.random.default_rng(0).integers(1, s, b))
+    out = ops.decode_attention(q, kc, vc, kv_pos, cur, window=window, bk=bk)
+    valid = (kv_pos >= 0) & (kv_pos <= cur[:, None])
+    if window:
+        valid &= kv_pos > cur[:, None] - window
+    bias = jnp.where(valid, 0.0, -1e30)
+    want = ref.decode_attention_ref(q, kc, vc, bias)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("m,k,n,bm", [(100, 200, 300, 64), (128, 128, 128, 128),
+                                      (17, 333, 65, 32)])
+def test_int8_matmul(m, k, n, bm):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (m, k))
+    w = jax.random.normal(ks[1], (k, n))
+    xq, sx = ref.quantize_ref(x)
+    wq, sw = ref.quantize_ref(w, axis=0)
+    out = ops.int8_matmul(xq, sx, wq, sw, bm=bm, bn=64, bk=64)
+    want = ref.int8_matmul_ref(xq, sx, wq, sw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_int8_quant_error_bound():
+    x = jax.random.normal(KEY, (64, 512))
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 256))
+    xq, sx = ref.quantize_ref(x)
+    wq, sw = ref.quantize_ref(w, axis=0)
+    approx = ops.int8_matmul(xq, sx, wq, sw)
+    exact = x @ w
+    rel = float(jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.02, rel    # int8 symmetric quant keeps ~1% error here
+
+
+@pytest.mark.parametrize("bt,s,di,n,bd", [(2, 64, 96, 16, 32),
+                                          (1, 128, 64, 8, 64),
+                                          (3, 37, 48, 16, 16)])
+def test_selective_scan(bt, s, di, n, bd):
+    ks = jax.random.split(KEY, 5)
+    u = jax.random.normal(ks[0], (bt, s, di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, s, di))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.3)
+    B = jax.random.normal(ks[3], (bt, s, n))
+    C = jax.random.normal(ks[4], (bt, s, n))
+    D = jnp.ones((di,))
+    y, h = ops.selective_scan(u, dt, A, B, C, D, bd=bd)
+    y2, h2 = ref.selective_scan_ref(u, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h2), atol=1e-4)
+
+
+def test_assoc_scan_matches_sequential_oracle():
+    """models/mamba.py's associative scan == ref.py's sequential scan."""
+    from repro.models.mamba import selective_scan_ref as assoc
+    ks = jax.random.split(KEY, 5)
+    bt, s, di, n = 2, 50, 32, 8
+    u = jax.random.normal(ks[0], (bt, s, di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, s, di))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.3)
+    B = jax.random.normal(ks[3], (bt, s, n))
+    C = jax.random.normal(ks[4], (bt, s, n))
+    D = jnp.ones((di,))
+    y1, h1 = assoc(u, dt, A, B, C, D)
+    y2, h2 = ref.selective_scan_ref(u, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)

@@ -1,0 +1,174 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EXPERIMENTS, EndEdgeCloudEnv
+from repro.core.spaces import (A_CLOUD, A_EDGE, N_PER_USER_ACTIONS, SpaceSpec)
+from repro.kernels import ref
+
+MAX_EXAMPLES = 50
+
+
+# ------------------------------------------------------------- spaces -----
+@given(st.integers(1, 5), st.data())
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_action_encode_decode_roundtrip(n, data):
+    spec = SpaceSpec(n)
+    per = tuple(data.draw(st.integers(0, N_PER_USER_ACTIONS - 1))
+                for _ in range(n))
+    assert spec.decode_action(spec.encode_action(per)) == per
+
+
+@given(st.integers(1, 4), st.data())
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_decode_batch_matches_scalar(n, data):
+    spec = SpaceSpec(n)
+    acts = np.asarray(data.draw(st.lists(
+        st.integers(0, spec.n_joint_actions - 1), min_size=1, max_size=20)))
+    batch = spec.decode_actions_batch(acts)
+    for i, a in enumerate(acts):
+        assert tuple(batch[i]) == spec.decode_action(int(a))
+
+
+# ---------------------------------------------------------------- env -----
+@given(st.integers(1, 5), st.data())
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_response_time_positive_and_acc_in_range(n, data):
+    env = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-B"], noise=0)
+    a = data.draw(st.integers(0, env.spec.n_joint_actions - 1))
+    ms, acc = env.expected_response(a)
+    assert ms > 0
+    assert 72.8 - 1e-9 <= acc <= 89.9 + 1e-9
+
+
+@given(st.integers(2, 5), st.data())
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_contention_monotone(n, data):
+    """More users on the same remote tier never lowers anyone's latency."""
+    env = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-A"], noise=0)
+    tier = data.draw(st.sampled_from([A_EDGE, A_CLOUD]))
+    k = data.draw(st.integers(1, n - 1))
+    few = [tier] * k + [0] * (n - k)
+    more = [tier] * (k + 1) + [0] * (n - k - 1)
+    t_few = env.response_times(few, noisy=False)
+    t_more = env.response_times(more, noisy=False)
+    assert t_more[0] >= t_few[0] - 1e-9
+
+
+@given(st.data())
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_weak_network_never_faster(data):
+    """Same decision under EXP-D (all weak) >= EXP-A (all regular)."""
+    n = data.draw(st.integers(1, 5))
+    env_a = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-A"], noise=0)
+    env_d = EndEdgeCloudEnv(n, EXPERIMENTS["EXP-D"], noise=0)
+    a = data.draw(st.integers(0, env_a.spec.n_joint_actions - 1))
+    assert env_d.expected_response(a)[0] >= env_a.expected_response(a)[0] - 1e-9
+
+
+@given(st.data())
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_model_ladder_latency_accuracy_tradeoff(data):
+    """Within a dtype family, higher-accuracy local models cost more."""
+    env = EndEdgeCloudEnv(1, EXPERIMENTS["EXP-A"], noise=0)
+    fam = data.draw(st.sampled_from([[0, 1, 2, 3], [4, 5, 6, 7]]))
+    i = data.draw(st.integers(0, 2))
+    hi, lo = fam[i], fam[i + 1]          # hi accuracy vs next step down
+    ms_hi, acc_hi = env.expected_response(env.spec.encode_action([hi]))
+    ms_lo, acc_lo = env.expected_response(env.spec.encode_action([lo]))
+    assert acc_hi > acc_lo and ms_hi > ms_lo
+
+
+# ------------------------------------------------------------ kernels -----
+@given(st.integers(1, 3), st.integers(1, 4), st.sampled_from([16, 32, 64]),
+       st.integers(2, 6))
+@settings(max_examples=20, deadline=None)
+def test_attention_rows_sum_to_one_property(b, kv, hd, blocks):
+    """Flash attention output is a convex combination of V rows: with
+    constant V == c, output == c regardless of masking pattern."""
+    from repro.kernels import ops
+    h = kv * 2
+    s = blocks * 16
+    key = jax.random.PRNGKey(b * 100 + kv)
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, hd))
+    v = jnp.ones((b, s, kv, hd)) * 3.5
+    out = ops.flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    np.testing.assert_allclose(np.asarray(out), 3.5, atol=1e-4)
+
+
+@given(st.integers(1, 3), st.integers(8, 64), st.integers(8, 48))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_bound(b, m, k):
+    """|dequant(quant(x)) - x| <= scale/2 elementwise."""
+    x = jax.random.normal(jax.random.PRNGKey(b), (m, k))
+    xq, s = ref.quantize_ref(x)
+    err = jnp.abs(xq.astype(jnp.float32) * s - x)
+    assert float(jnp.max(err - s / 2)) < 1e-6
+
+
+# ------------------------------------------------------------ replay ------
+@given(st.integers(1, 64), st.integers(1, 200))
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_replay_fifo_len(cap, n_push):
+    from repro.core.replay import ReplayBuffer
+    rb = ReplayBuffer(cap, 4)
+    for i in range(n_push):
+        rb.push(np.full(4, i, np.float32), i, float(i), np.zeros(4))
+    assert len(rb) == min(cap, n_push)
+    if n_push >= cap:      # oldest overwritten: all stored ids in window
+        lo = n_push - cap
+        assert rb.a.min() >= lo
+
+
+# ------------------------------------------------------- sharding rules ---
+@given(st.data())
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_sharding_spec_always_valid(data):
+    """spec_for never assigns an axis twice and always divides the dims."""
+    import math
+    from jax.sharding import PartitionSpec
+    from repro.distributed import sharding as sh
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    ndim = data.draw(st.integers(1, 5))
+    shape = tuple(data.draw(st.sampled_from([1, 2, 3, 16, 25, 128, 256, 4096]))
+                  for _ in range(ndim))
+    axes = tuple(data.draw(st.sampled_from(
+        ["batch", "fsdp", "model", "kv_seq", "vocab", "expert", None]))
+        for _ in range(ndim))
+    spec = sh._checked_spec(FakeMesh, shape, sh._resolve(FakeMesh, axes))
+    used = []
+    for dim, entry in zip(shape, tuple(spec)):
+        if entry is None:
+            continue
+        entry_t = entry if isinstance(entry, tuple) else (entry,)
+        size = math.prod(FakeMesh.shape[a] for a in entry_t)
+        assert dim % size == 0
+        used += list(entry_t)
+    assert len(used) == len(set(used))
+
+
+# --------------------------------------------------------- optimizer ------
+@given(st.floats(1e-5, 1e-2), st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_adamw_descends_quadratic(lr, seed):
+    from repro.training.optimizer import (AdamWConfig, apply_updates,
+                                          init_opt_state)
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (8,))
+    params = {"w": jnp.zeros((8,))}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=lr, warmup_steps=0, total_steps=1000,
+                      weight_decay=0.0, grad_clip=0.0)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, opt, _ = apply_updates(params, g, opt, cfg)
+    assert float(loss(params)) < l0

@@ -1,0 +1,152 @@
+"""Substrate tests: serving engine, batcher, data pipeline, checkpoint,
+quantized variants, orchestrator integration."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serving import Request, RequestBatcher, ServingEngine
+from repro.training.data import SyntheticLM, batches
+
+
+def test_batcher_padding_and_order():
+    b = RequestBatcher(batch_size=3, buckets=(16, 32))
+    for i in range(5):
+        b.submit(Request(rid=i, prompt=np.arange(5 + i, dtype=np.int32)))
+    reqs, toks, lens = b.next_batch()
+    assert len(reqs) == 3 and toks.shape == (3, 16)
+    assert [r.rid for r in reqs] == [0, 1, 2]
+    assert list(lens) == [5, 6, 7]
+    assert (toks[0, 5:] == 0).all()
+    reqs2, toks2, _ = b.next_batch()
+    assert len(reqs2) == 2
+    assert b.next_batch() is None
+
+
+def test_serving_engine_generates():
+    cfg = reduced(get_config("gemma-7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_len=64)
+    toks = np.arange(20, dtype=np.int32)[None].repeat(2, 0) % cfg.vocab_size
+    out, wall = eng.generate(toks, max_new_tokens=4)
+    assert out.shape == (2, 4) and wall > 0
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+def test_synthetic_lm_learnable_and_deterministic():
+    src1 = SyntheticLM(64, seed=3)
+    src2 = SyntheticLM(64, seed=3)
+    a, b = src1.sample(4, 32), src2.sample(4, 32)
+    assert (a == b).all()
+    assert a.min() >= 0 and a.max() < 64
+    # markov structure: transition matrix rows are a proper distribution
+    np.testing.assert_allclose(src1.probs.sum(1), 1.0, atol=1e-6)
+
+
+def test_checkpoint_roundtrip_mixed_dtypes(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.int32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16) * 1.5,
+                  "d": [jnp.zeros((2,), jnp.float32),
+                        jnp.full((3,), 7.0, jnp.float32)]}}
+    path = str(tmp_path / "ck")
+    save_pytree(path, tree)
+    back = load_pytree(path, tree)
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_int8_variant_forward_close_to_fp():
+    """The int8 ladder variant (d4) approximates its fp twin (d0)."""
+    cfg = dataclasses.replace(reduced(get_config("gemma-7b")), dtype="float32")
+    cfg8 = dataclasses.replace(cfg, quant="int8")
+    m, m8 = build_model(cfg), build_model(cfg8)
+    p = m.init(jax.random.PRNGKey(0))
+
+    # quantize the SAME weights for the int8 twin
+    def quantize_tree(t):
+        if isinstance(t, dict) and "w" in t and t["w"].ndim == 2 \
+                and t["w"].shape[0] > 8:
+            w = t["w"].astype(jnp.float32)
+            s = jnp.max(jnp.abs(w), 0, keepdims=True) / 127.0 + 1e-8
+            wq = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
+            return {"w_q": wq, "s": s}
+        if isinstance(t, dict):
+            return {k: quantize_tree(v) for k, v in t.items()}
+        if isinstance(t, list):
+            return [quantize_tree(v) for v in t]
+        return t
+
+    p8 = quantize_tree(p)
+    # embed stays fp (matches init_linear quant rules: embeds not quantized)
+    p8["embed"] = p["embed"]
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    l1, _ = m.prefill(p, {"tokens": toks})
+    l8, _ = m8.prefill(p8, {"tokens": toks})
+    p1 = jax.nn.softmax(l1[:, -1, : cfg.vocab_size], -1)
+    p2 = jax.nn.softmax(l8[:, -1, : cfg.vocab_size], -1)
+    tv = float(0.5 * jnp.abs(p1 - p2).sum(-1).max())
+    assert tv < 0.25, tv    # int8 PTQ keeps the output distribution close
+
+
+def test_orchestrator_end_to_end_tiny():
+    """Agent decision -> engine dispatch -> real latencies (paper Fig. 4)."""
+    from repro.core import (EXPERIMENTS, EndEdgeCloudEnv, QLearningAgent,
+                            IntelligentOrchestrator, train_agent)
+    from repro.launch.serve import build_engines
+    cfg = get_config("edge-ladder")
+    env = EndEdgeCloudEnv(2, EXPERIMENTS["EXP-A"], accuracy_threshold=0.0,
+                          seed=0)
+    agent = QLearningAgent(env.spec, seed=0)
+    train_agent(agent, env, 4000)
+    engines = build_engines(cfg, variants=("d0", "d7"), max_len=32)
+    orch = IntelligentOrchestrator(agent, env, engines)
+    per_user = orch.decide(env.reset())
+    assert len(per_user) == 2
+    # Min threshold -> cheapest local model
+    assert per_user == (7, 7)
+    prompts = [np.arange(8, dtype=np.int32) for _ in range(2)]
+    results = orch.dispatch(per_user, prompts)
+    assert all(r[0] == "d7" and r[1] == "S" and r[2] > 0 for r in results)
+
+
+def test_int8_kv_cache_decode_close():
+    """Beyond-paper: int8 KV cache decode tracks the bf16 cache decode."""
+    import repro.tuning as tuning
+    from repro.models import build_model as _bm
+    cfg = dataclasses.replace(reduced(get_config("gemma-7b")), dtype="float32")
+    m = _bm(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 40), 0,
+                              cfg.vocab_size)
+    _, cache = m.prefill(params, {"tokens": toks}, max_len=48)
+    nxt = toks[:, -1:]
+    ref_logits, _ = m.decode(params, cache, nxt)
+    # quantize the prefilled cache into the int8 layout
+    segs8 = []
+    for c in cache["segments"]:
+        amax = jnp.max(jnp.abs(c["k"].astype(jnp.float32)), -1) + 1e-8
+        ks = amax / 127.0
+        amaxv = jnp.max(jnp.abs(c["v"].astype(jnp.float32)), -1) + 1e-8
+        vs = amaxv / 127.0
+        segs8.append({
+            "k": jnp.clip(jnp.round(c["k"].astype(jnp.float32) / ks[..., None]),
+                          -127, 127).astype(jnp.int8),
+            "v": jnp.clip(jnp.round(c["v"].astype(jnp.float32) / vs[..., None]),
+                          -127, 127).astype(jnp.int8),
+            "k_s": ks, "v_s": vs})
+    cache8 = {"pos": cache["pos"], "segments": segs8}
+    q_logits, _ = m.decode(params, cache8, nxt)
+    p1 = jax.nn.softmax(ref_logits[:, -1, : cfg.vocab_size], -1)
+    p2 = jax.nn.softmax(q_logits[:, -1, : cfg.vocab_size], -1)
+    tv = float(0.5 * jnp.abs(p1 - p2).sum(-1).max())
+    assert tv < 0.1, tv
