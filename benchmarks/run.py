@@ -10,9 +10,10 @@ import time
 
 from benchmarks import (bench_adaptation, bench_fig1_motivation,
                         bench_fig5_user_variability, bench_fig7_transfer,
-                        bench_kernels, bench_overhead,
-                        bench_table8_decisions, bench_table9_constraints,
-                        bench_table10_sota, bench_table11_convergence)
+                        bench_fleet_throughput, bench_kernels,
+                        bench_overhead, bench_table8_decisions,
+                        bench_table9_constraints, bench_table10_sota,
+                        bench_table11_convergence)
 
 SUITES = {
     "fig1": bench_fig1_motivation,
@@ -25,6 +26,7 @@ SUITES = {
     "overhead": bench_overhead,
     "kernels": bench_kernels,
     "adaptation": bench_adaptation,   # beyond-paper: mid-run network shift
+    "fleet": bench_fleet_throughput,  # beyond-paper: vectorized fleet sim
 }
 
 

@@ -12,6 +12,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.env import EndEdgeCloudEnv
+from repro.fleet.dynamics import feasible as _feasible
 
 
 def bruteforce_optimal(env: EndEdgeCloudEnv, threshold: float,
@@ -19,7 +20,7 @@ def bruteforce_optimal(env: EndEdgeCloudEnv, threshold: float,
     """Returns (best_action, best_ms, best_acc, n_evaluated)."""
     actions = env.spec.all_actions() if actions is None else actions
     ms, acc = env.expected_response_batch(actions)
-    feasible = (acc > threshold) | np.isclose(acc, threshold)
+    feasible = _feasible(acc, threshold)
     if not feasible.any():
         raise ValueError("no feasible action for threshold %.2f" % threshold)
     ms_f = np.where(feasible, ms, np.inf)

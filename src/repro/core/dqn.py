@@ -69,7 +69,7 @@ def _mlp_apply(params, x):
 
 
 class DQNAgent:
-    def __init__(self, spec: SpaceSpec, cfg: DQNConfig = None,
+    def __init__(self, spec: SpaceSpec, cfg: Optional[DQNConfig] = None,
                  actions: Optional[np.ndarray] = None, seed: int = 0,
                  accuracy_threshold: Optional[float] = None):
         """accuracy_threshold: the QoS goal (paper Fig. 4) — when given,
@@ -182,6 +182,7 @@ class DQNAgent:
         # known model-accuracy table (the agent's QoS-goal knowledge).
         from repro.core.env import TOP5
         from repro.core.spaces import A_EDGE
+        from repro.fleet.dynamics import feasible
         k = min(4, q.shape[-1])
         topk = np.argsort(q, axis=-1)[:, ::-1][:, :k]           # (N, k)
         import itertools
@@ -190,7 +191,7 @@ class DQNAgent:
         for combo in itertools.product(range(k), repeat=self.spec.n_users):
             per = topk[np.arange(self.spec.n_users), list(combo)]
             acc = TOP5[np.where(per < A_EDGE, per, 0)].mean()
-            if not (acc > th or np.isclose(acc, th)):
+            if not feasible(acc, th):
                 continue
             qs = q[np.arange(self.spec.n_users), per].sum()
             if qs > best_q:

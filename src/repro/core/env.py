@@ -18,73 +18,40 @@ Response time of user i running model d at tier j (DESIGN.md §5):
   T = T_orch(B_i) + up_j(d) + T_comp1(d, j) * cpu_factor(n_j, c_j)
 with shared-link and processor-sharing contention. Compute cost is
 affine in the model's MACs with separate fp32/int8 slopes fitted to
-Table 9 (see `_fit` comment); edge/cloud are 2x/4x the device (vCPU
-ratio, Table 6).
+Table 9 (see `_fit` comment in fleet/dynamics.py); edge/cloud are 2x/4x
+the device (vCPU ratio, Table 6).
 
-The environment also exposes ``expected_response`` (noise-free, fixed
-nominal state) used by the brute-force oracle.
+The latency/accuracy model itself lives in ``repro.fleet.dynamics`` as a
+pure, batch-shaped kernel (one code path for scalar, oracle-batch, and
+jitted fleet execution); this class is the stateful single-cell gym view
+over it. ``expected_response`` (noise-free, fixed nominal state) is used
+by the brute-force oracle.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.configs.edge_ladder import MOBILENET_TABLE4
+from repro.fleet import dynamics
+# re-exported for backward compatibility (benchmarks, agents import these)
+from repro.fleet.dynamics import (A_FP32, A_INT8, B_FP32, B_INT8,
+                                  CLOUD_LINK_CAP, EDGE_LINK_CAP, EXPERIMENTS,
+                                  IS_INT8, MACS, MAX_RESPONSE_MS,
+                                  MEM_BUSY_PENALTY, Scenario, T_HOP_CLOUD,
+                                  T_ORCH, T_UP_EDGE, TIER_CORES, TIER_SPEED,
+                                  TOP1, TOP5, t_comp_device)
 from repro.core.spaces import (A_CLOUD, A_EDGE, CLOUD_CPU_LEVELS,
-                               EDGE_CPU_LEVELS, N_PER_USER_ACTIONS, SpaceSpec)
+                               EDGE_CPU_LEVELS, SpaceSpec)
 
-# ---- model ladder metadata (paper Table 4) --------------------------------
-MACS = np.array([m for _, m, _, _, _ in MOBILENET_TABLE4], np.float64)
-IS_INT8 = np.array([dt == "int8" for _, _, dt, _, _ in MOBILENET_TABLE4])
-TOP5 = np.array([t5 for _, _, _, _, t5 in MOBILENET_TABLE4], np.float64)
-TOP1 = np.array([t1 for _, _, _, t1, _ in MOBILENET_TABLE4], np.float64)
+__all__ = [
+    "EndEdgeCloudEnv", "Scenario", "EXPERIMENTS", "THRESHOLDS",
+    "MACS", "IS_INT8", "TOP5", "TOP1", "t_comp_device",
+    "A_FP32", "B_FP32", "A_INT8", "B_INT8", "TIER_SPEED", "TIER_CORES",
+    "T_ORCH", "T_UP_EDGE", "T_HOP_CLOUD", "EDGE_LINK_CAP", "CLOUD_LINK_CAP",
+    "MEM_BUSY_PENALTY", "MAX_RESPONSE_MS",
+]
 
-# ---- calibrated constants (ms) --------------------------------------------
-# _fit: device fp32 affine from (d0=459, 85%-row d2=158.4) -> a=50.8 b=0.7175
-#       device int8 affine from (Min row d7=50.7, 89%-row d4=223) -> a=37.3 b=0.326
-A_FP32, B_FP32 = 50.8, 0.7175          # ms, ms/MMAC
-A_INT8, B_INT8 = 37.3, 0.326
-TIER_SPEED = {"S": 1.0, "E": 2.0, "C": 4.0}   # vCPUs 1/2/4 (Table 6)
-TIER_CORES = {"E": 2.0, "C": 4.0}
-T_ORCH = {0: 21.4, 1: 141.0}           # B regular/weak (Table 12 totals)
-T_UP_EDGE = {0: 120.0, 1: 280.0}       # image upload device->edge
-T_HOP_CLOUD = {0: 108.0, 1: 230.0}     # edge->cloud hop
-EDGE_LINK_CAP = 1.3
-CLOUD_LINK_CAP = 2.4
-MEM_BUSY_PENALTY = 1.15
-MAX_RESPONSE_MS = 2500.0               # reward floor (constraint violation)
-
-
-def t_comp_device(model_id) -> np.ndarray:
-    m = np.asarray(model_id)
-    macs, int8 = MACS[m], IS_INT8[m]
-    return np.where(int8, A_INT8 + B_INT8 * macs, A_FP32 + B_FP32 * macs)
-
-
-@dataclasses.dataclass
-class Scenario:
-    """Network-condition scenario (paper Table 5): 0=Regular, 1=Weak."""
-    name: str
-    end_b: Tuple[int, ...]            # per end-node
-    edge_b: int
-
-    @staticmethod
-    def from_string(name: str, pattern: str):
-        """pattern like 'RWRWR|W' (5 end-nodes | edge)."""
-        ends, edge = pattern.split("|")
-        conv = {"R": 0, "W": 1}
-        return Scenario(name, tuple(conv[c] for c in ends), conv[edge])
-
-
-# paper Table 5
-EXPERIMENTS = {
-    "EXP-A": Scenario.from_string("EXP-A", "RRRRR|R"),
-    "EXP-B": Scenario.from_string("EXP-B", "RWRWR|W"),
-    "EXP-C": Scenario.from_string("EXP-C", "WWWRR|R"),
-    "EXP-D": Scenario.from_string("EXP-D", "WWWWW|W"),
-}
 
 # paper §6.1.1 accuracy thresholds (Top-5 averages)
 THRESHOLDS = {"Min": 0.0, "80%": 80.0, "85%": 85.0, "89%": 89.0, "Max": 89.9}
@@ -93,7 +60,7 @@ THRESHOLDS = {"Min": 0.0, "80%": 80.0, "85%": 85.0, "89%": 89.0, "Max": 89.9}
 class EndEdgeCloudEnv:
     """Gym-style multi-user orchestration environment."""
 
-    def __init__(self, n_users: int, scenario: Scenario = None,
+    def __init__(self, n_users: int, scenario: Optional[Scenario] = None,
                  accuracy_threshold: float = 0.0, seed: int = 0,
                  noise: float = 0.02, exogenous: bool = False):
         self.spec = SpaceSpec(n_users)
@@ -121,8 +88,8 @@ class EndEdgeCloudEnv:
 
     def _observe(self) -> tuple:
         p_e, p_c = self._cpu_levels()
-        m_e = int(self._last_counts[0] > 2)
-        m_c = int(self._last_counts[1] > 3)
+        m_e = int(self._last_counts[0] > dynamics.EDGE_MEM_BUSY_AT)
+        m_c = int(self._last_counts[1] > dynamics.CLOUD_MEM_BUSY_AT)
         ends = [(0, 0, self.scenario.end_b[i]) for i in range(self.n)]
         return self.spec.state_tuple(p_e, m_e, self.scenario.edge_b,
                                      p_c, m_c, self.scenario.edge_b, ends)
@@ -135,45 +102,18 @@ class EndEdgeCloudEnv:
     # ------------------------------------------------------------------
     def response_times(self, per_user: Sequence[int], *, noisy: bool = True,
                        counts: Optional[Tuple[int, int]] = None):
-        """Vector of response times (ms) for a joint decision."""
+        """Vector of response times (ms) for a joint decision. Thin wrapper
+        over the shared ``fleet.dynamics.response_times`` kernel."""
         per_user = np.asarray(per_user)
-        local = per_user < A_EDGE
-        at_edge = per_user == A_EDGE
-        at_cloud = per_user == A_CLOUD
-        n_e = int(at_edge.sum()) if counts is None else counts[0]
-        n_c = int(at_cloud.sum()) if counts is None else counts[1]
-
         b_i = np.asarray(self.scenario.end_b[: self.n])
-        b_e = self.scenario.edge_b
-
-        t = np.array([T_ORCH[b] for b in b_i])
-        # local compute: chosen model at device speed
-        model = np.where(local, per_user, 0)
-        t_dev = t_comp_device(model)
-        t = t + np.where(local, t_dev, 0.0)
-        # edge: upload (shared link) + d0 at edge speed (processor sharing)
-        up_e = np.array([T_UP_EDGE[b] for b in b_i])
-        cpu_e = max(1.0, n_e / TIER_CORES["E"])
-        link_e = max(1.0, n_e / EDGE_LINK_CAP)
-        t_e = up_e * link_e + (t_comp_device(0) / TIER_SPEED["E"]) * cpu_e
-        mem_e = MEM_BUSY_PENALTY if n_e > 2 else 1.0
-        t = t + np.where(at_edge, t_e, 0.0) + np.where(
-            at_edge, (t_comp_device(0) / TIER_SPEED["E"]) * cpu_e * (mem_e - 1.0), 0.0)
-        # cloud: upload + hop (shared) + d0 at cloud speed
-        cpu_c = max(1.0, n_c / TIER_CORES["C"])
-        link_c = max(1.0, n_c / CLOUD_LINK_CAP)
-        mem_c = MEM_BUSY_PENALTY if n_c > 3 else 1.0
-        t_c = (up_e * link_c + T_HOP_CLOUD[b_e] * link_c
-               + (t_comp_device(0) / TIER_SPEED["C"]) * cpu_c * mem_c)
-        t = t + np.where(at_cloud, t_c, 0.0)
+        t = dynamics.response_times(per_user, b_i, self.scenario.edge_b,
+                                    counts=counts)
         if noisy and self.noise:
             t = t * self.rng.normal(1.0, self.noise, t.shape).clip(0.8, 1.2)
         return t
 
     def accuracies(self, per_user) -> np.ndarray:
-        per_user = np.asarray(per_user)
-        model = np.where(per_user < A_EDGE, per_user, 0)
-        return TOP5[model]
+        return dynamics.accuracies(np.asarray(per_user))
 
     def expected_response(self, joint_action: int) -> Tuple[float, float]:
         """(mean response ms, mean top-5 accuracy), noise-free."""
@@ -182,29 +122,13 @@ class EndEdgeCloudEnv:
         return float(t.mean()), float(self.accuracies(per_user).mean())
 
     def expected_response_batch(self, actions: np.ndarray):
-        """Vectorized (K,) joint actions -> (mean_ms (K,), mean_acc (K,))."""
+        """Vectorized (K,) joint actions -> (mean_ms (K,), mean_acc (K,)).
+        Same kernel as the scalar path, broadcast over the K axis."""
         pu = self.spec.decode_actions_batch(actions)            # (K, N)
-        local = pu < A_EDGE
-        n_e = (pu == A_EDGE).sum(1)
-        n_c = (pu == A_CLOUD).sum(1)
         b_i = np.asarray(self.scenario.end_b[: self.n])
-        b_e = self.scenario.edge_b
-        t = np.array([T_ORCH[b] for b in b_i])[None, :].repeat(len(pu), 0)
-        t = t + np.where(local, t_comp_device(np.where(local, pu, 0)), 0.0)
-        up_e = np.array([T_UP_EDGE[b] for b in b_i])[None, :]
-        cpu_e = np.maximum(1.0, n_e / TIER_CORES["E"])[:, None]
-        link_e = np.maximum(1.0, n_e / EDGE_LINK_CAP)[:, None]
-        mem_e = np.where(n_e > 2, MEM_BUSY_PENALTY, 1.0)[:, None]
-        t_e = up_e * link_e + (t_comp_device(0) / TIER_SPEED["E"]) * cpu_e * mem_e
-        t = t + np.where(pu == A_EDGE, t_e, 0.0)
-        cpu_c = np.maximum(1.0, n_c / TIER_CORES["C"])[:, None]
-        link_c = np.maximum(1.0, n_c / CLOUD_LINK_CAP)[:, None]
-        mem_c = np.where(n_c > 3, MEM_BUSY_PENALTY, 1.0)[:, None]
-        t_c = (up_e * link_c + T_HOP_CLOUD[b_e] * link_c
-               + (t_comp_device(0) / TIER_SPEED["C"]) * cpu_c * mem_c)
-        t = t + np.where(pu == A_CLOUD, t_c, 0.0)
-        acc = TOP5[np.where(local, pu, 0)].mean(1)
-        return t.mean(1), acc
+        ms, acc = dynamics.expected_response(pu, b_i[None, :],
+                                             self.scenario.edge_b)
+        return ms, acc
 
     # ------------------------------------------------------------------
     def step(self, joint_action: int):
@@ -213,16 +137,14 @@ class EndEdgeCloudEnv:
         t = self.response_times(per_user, noisy=True)
         acc = float(self.accuracies(per_user).mean())
         avg = float(t.mean())
-        if acc > self.threshold or np.isclose(acc, self.threshold):
-            reward = -avg
-        else:
-            reward = -MAX_RESPONSE_MS
+        ok = bool(dynamics.feasible(acc, self.threshold))
+        reward = float(dynamics.reward(avg, acc, self.threshold))
         self._last_counts = (int((np.asarray(per_user) == A_EDGE).sum()),
                              int((np.asarray(per_user) == A_CLOUD).sum()))
         if self.exogenous:
             self._bg = 0.9 * self._bg + self.rng.normal(0, 0.5, 2)
         nxt = self._observe()
         info = {"avg_response_ms": avg, "avg_accuracy": acc,
-                "violated": acc < self.threshold and not np.isclose(acc, self.threshold),
+                "violated": not ok,
                 "per_user_ms": t, "decision": per_user}
-        return nxt, reward / 1000.0, info
+        return nxt, reward, info

@@ -15,10 +15,9 @@ import dataclasses
 import time
 from typing import Dict, List, Optional
 
-import numpy as np
-
 from repro.core.bruteforce import bruteforce_optimal
 from repro.core.env import EndEdgeCloudEnv
+from repro.fleet import dynamics
 
 
 @dataclasses.dataclass
@@ -58,8 +57,7 @@ def train_agent(agent, env: EndEdgeCloudEnv, max_steps: int,
         if step % check_every == 0:
             g = agent.greedy_action(state)
             g_ms, g_acc = env.expected_response(g)
-            feasible = (g_acc > env.threshold
-                        or np.isclose(g_acc, env.threshold))
+            feasible = bool(dynamics.feasible(g_acc, env.threshold))
             ok = feasible and g_ms <= best_ms * (1 + tol)
             streak = streak + 1 if ok else 0
             history.append({"step": step, "greedy_ms": g_ms,
@@ -87,7 +85,8 @@ class IntelligentOrchestrator:
 
     TIER_OF_ACTION = {8: "E", 9: "C"}
 
-    def __init__(self, agent, env: EndEdgeCloudEnv, engines: Optional[Dict] = None):
+    def __init__(self, agent, env: EndEdgeCloudEnv,
+                 engines: Optional[Dict] = None):
         self.agent = agent
         self.env = env
         self.engines = engines or {}
@@ -100,7 +99,6 @@ class IntelligentOrchestrator:
     def dispatch(self, per_user, prompts):
         """Execute decisions on real engines (examples/serve_orchestrated).
         Returns per-user (variant, tier, response_ms)."""
-        import numpy as np
         out = []
         for u, a in enumerate(per_user):
             if a < 8:

@@ -34,7 +34,7 @@ class QLearningConfig:
 
 
 class QLearningAgent:
-    def __init__(self, spec: SpaceSpec, cfg: QLearningConfig = None,
+    def __init__(self, spec: SpaceSpec, cfg: Optional[QLearningConfig] = None,
                  actions: Optional[np.ndarray] = None, seed: int = 0):
         self.spec = spec
         self.cfg = cfg or QLearningConfig()

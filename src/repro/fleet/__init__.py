@@ -1,0 +1,46 @@
+"""repro.fleet — vectorized fleet simulation and population-scale RL.
+
+See README.md in this directory for the cell/fleet abstraction and how
+it maps back to the paper's single-cell testbed.
+
+Layering: ``dynamics`` is a leaf module, deliberately free of
+``repro.core`` imports, and is the only part of this package that
+``core.env`` depends on. ``scenarios``/``population`` import from core,
+so they are loaded lazily here (module ``__getattr__``) — importing
+``repro.core`` pulls in ``repro.fleet`` without ever executing them,
+keeping the core <-> fleet dependency acyclic regardless of which
+package is imported first.
+"""
+from repro.fleet import dynamics
+from repro.fleet.dynamics import (accuracies, cell_response_times,
+                                  expected_response, feasible,
+                                  fleet_actions_expected_response,
+                                  fleet_expected_response, response_times,
+                                  reward, t_comp_device)
+
+_SCENARIOS = ("FleetConfig", "FleetScenario", "diurnal_rate",
+              "heterogeneous_sizes", "init_fleet", "init_links",
+              "mixed_table5_fleet", "poisson_active", "step_churn",
+              "step_fleet", "step_links", "table5_fleet")
+_POPULATION = ("FleetOrchestrator", "FleetQConfig", "FleetQLearning",
+               "FleetTrainResult", "default_actions", "fleet_bruteforce",
+               "make_fleet_env_step", "simulate_responses")
+
+__all__ = [
+    "dynamics", "accuracies", "cell_response_times", "expected_response",
+    "feasible", "fleet_actions_expected_response",
+    "fleet_expected_response", "response_times", "reward", "t_comp_device",
+    *_SCENARIOS, *_POPULATION,
+]
+
+
+def __getattr__(name):
+    import importlib
+    if name in _SCENARIOS or name == "scenarios":
+        mod = importlib.import_module("repro.fleet.scenarios")
+    elif name in _POPULATION or name == "population":
+        mod = importlib.import_module("repro.fleet.population")
+    else:
+        raise AttributeError(
+            f"module 'repro.fleet' has no attribute {name!r}")
+    return mod if name in ("scenarios", "population") else getattr(mod, name)

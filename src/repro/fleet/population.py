@@ -1,0 +1,364 @@
+"""Population-scale RL training: thousands of independent cells per step.
+
+The paper trains one tabular agent against one cell (≤5 users) with a
+Python-loop environment. This module scales that to fleets: a dense
+per-cell Q-table of shape ``(cells, states, actions)`` updated for every
+cell in a single ``jax.jit`` call per host step, over the shared
+``fleet.dynamics`` kernel and a ``fleet.scenarios.FleetScenario``.
+
+State space. The scalar env's observation is fully determined by the
+previous step's (edge jobs, cloud jobs) counts plus the link states, so
+the fleet agent indexes its Q-table by
+``(n_edge, n_cloud[, packed link bits])`` — ``(N+1)^2`` states for
+static-link fleets (the paper's setting), times ``2^(N+1)`` when
+``track_links`` is on for Markov-modulated fleets. This is exactly the
+set of states the scalar agent's lazy dict ever materializes.
+
+Action space. A candidate set of joint actions (default: the full
+``10^N`` space for ``N <= 3``, the SOTA-restricted ``3^N`` offloading
+set above) shared by all cells; its decoded ``(K, N)`` table lives on
+device so greedy routing for the whole fleet is one argmax + one gather.
+
+``fleet_bruteforce`` evaluates every candidate action for every cell in
+chunks (the vectorized analogue of ``core.bruteforce``), and
+``FleetQLearning.train`` reports per-cell convergence against it, the
+fleet analogue of ``core.orchestrator.train_agent``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spaces import SpaceSpec, restricted_actions
+from repro.fleet import dynamics
+from repro.fleet.scenarios import FleetConfig, FleetScenario, step_fleet
+
+
+def simulate_responses(key, scen: FleetScenario, per_user, noise: float):
+    """Noisy fleet-wide response simulation: (cells,) mean ms and mean
+    accuracy over each cell's active users, plus next-step job counts.
+    The jittable analogue of ``EndEdgeCloudEnv.response_times`` +
+    ``accuracies`` for every cell at once."""
+    mean_ms, acc = dynamics.expected_response(
+        per_user, scen.end_b, scen.edge_b, active=scen.active, xp=jnp)
+    n_act = jnp.maximum(scen.active.sum(-1), 1)
+    if noise:
+        # one per-cell draw on the mean instead of the scalar env's N
+        # per-user draws (~5x less RNG); the 1/sqrt(n) scaling matches the
+        # variance of averaging n independent multipliers when per-user
+        # times are equal, and approximates it otherwise
+        mult = jnp.clip(1.0 + (noise / jnp.sqrt(n_act))
+                        * jax.random.normal(key, mean_ms.shape), 0.8, 1.2)
+        mean_ms = mean_ms * mult
+    counts = jnp.stack(
+        [((per_user == dynamics.A_EDGE) & scen.active).sum(-1),
+         ((per_user == dynamics.A_CLOUD) & scen.active).sum(-1)],
+        axis=-1).astype(jnp.int32)
+    return mean_ms, acc, counts
+
+
+def make_fleet_env_step(fleet_cfg: FleetConfig, threshold: float = 0.0,
+                        noise: float = 0.02):
+    """Pure per-step fleet environment transition — the fleet analogue of
+    ``EndEdgeCloudEnv.step`` with the decision supplied externally.
+
+    Returns ``env_step(key, scen, per_user) -> (scen2, counts2, mean_ms,
+    mean_acc, reward)``; wrap in ``jax.jit`` / ``lax.scan`` to step every
+    cell of the fleet per call.
+    """
+    def env_step(key, scen, per_user):
+        k_noise, k_scen = jax.random.split(key)
+        mean_ms, acc, counts = simulate_responses(k_noise, scen, per_user,
+                                                  noise)
+        r = dynamics.reward(mean_ms, acc, threshold, xp=jnp)
+        scen2 = step_fleet(k_scen, scen, fleet_cfg)
+        return scen2, counts, mean_ms, acc, r
+
+    return env_step
+
+
+def default_actions(spec: SpaceSpec) -> np.ndarray:
+    """Full joint space for small N, SOTA-restricted offloading set above
+    (keeps the dense per-cell table ~tens of MB at N=5)."""
+    if spec.n_users <= 3:
+        return spec.all_actions()
+    return restricted_actions(spec)
+
+
+@dataclasses.dataclass
+class FleetQConfig:
+    alpha: float = 0.9               # paper Table 7
+    gamma: float = 0.1
+    eps_start: float = 1.0
+    eps_decay: float = 1e-3          # multiplicative, per fleet step
+    eps_min: float = 0.01
+    noise: float = 0.02
+    accuracy_threshold: float = 0.0
+    track_links: bool = False        # index Q by link bits (Markov fleets)
+
+
+class FleetQLearning:
+    """Batched epsilon-greedy tabular Q-learning over a fleet of cells.
+
+    One ``step()`` = one environment step for EVERY cell: eps-greedy
+    action selection, noisy response simulation, exogenous scenario
+    transition, and TD update, all inside a single jitted call.
+    """
+
+    def __init__(self, scen: FleetScenario, fleet_cfg: FleetConfig,
+                 cfg: Optional[FleetQConfig] = None,
+                 actions: Optional[np.ndarray] = None, seed: int = 0):
+        self.cfg = cfg or FleetQConfig()
+        self.fleet_cfg = fleet_cfg
+        self.spec = SpaceSpec(scen.users)
+        self.actions = np.asarray(actions if actions is not None
+                                  else default_actions(self.spec))
+        self.pu_table = jnp.asarray(
+            self.spec.decode_actions_batch(self.actions))      # (K, N)
+        self.n_actions = len(self.actions)
+        users = scen.users
+        self._count_states = (users + 1) ** 2
+        self._link_states = 2 ** (users + 1) if self.cfg.track_links else 1
+        self.n_states = self._count_states * self._link_states
+        self.q = jnp.zeros((scen.cells, self.n_states, self.n_actions),
+                           jnp.float32)
+        self.scen = scen
+        self.counts = jnp.zeros((scen.cells, 2), jnp.int32)
+        self.eps = self.cfg.eps_start
+        self.key = jax.random.PRNGKey(seed)
+        self.steps = 0
+        # donate the Q-table: the scatter-add then runs in place instead of
+        # copying the whole (cells, S, K) buffer every step (~30 ms at 36 MB)
+        self._step = jax.jit(self._make_step(), donate_argnums=(0,))
+        self._run = jax.jit(self._make_run(), static_argnums=(5,),
+                            donate_argnums=(0,))
+        self._greedy = jax.jit(self._make_greedy())
+
+    # ------------------------------------------------------------------
+    def _state_index(self, counts, scen: FleetScenario):
+        users = scen.users
+        s = counts[:, 0] * (users + 1) + counts[:, 1]
+        if self.cfg.track_links:
+            weights = 2 ** jnp.arange(users)
+            packed = (scen.end_b * weights[None, :]).sum(-1) * 2 + scen.edge_b
+            s = s * self._link_states + packed
+        return s
+
+    def _make_step(self):
+        cfg, fleet_cfg, pu = self.cfg, self.fleet_cfg, self.pu_table
+        n_actions = self.n_actions
+
+        def step(q, counts, scen, eps, key):
+            cells = jnp.arange(q.shape[0])
+            k_exp, k_noise, k_scen = jax.random.split(key, 3)
+            s = self._state_index(counts, scen)
+            q_s = q[cells, s]                                  # (cells, K)
+            greedy = q_s.argmax(-1)
+            # one uniform drives both the explore decision and, conditioned
+            # on u < eps, the (still uniform) random action u/eps
+            u = jax.random.uniform(k_exp, greedy.shape)
+            rand = jnp.minimum((u / jnp.maximum(eps, 1e-9)
+                                * n_actions).astype(jnp.int32),
+                               n_actions - 1)
+            a = jnp.where(u < eps, rand, greedy)               # (cells,)
+            per_user = pu[a]                                   # (cells, N)
+            # simulate every cell's response under its own conditions
+            mean_ms, acc, counts2 = simulate_responses(k_noise, scen,
+                                                       per_user, cfg.noise)
+            r = dynamics.reward(mean_ms, acc, cfg.accuracy_threshold,
+                                xp=jnp)
+            # exogenous transition + TD update against the next state
+            scen2 = step_fleet(k_scen, scen, fleet_cfg)
+            s2 = self._state_index(counts2, scen2)
+            td = r + cfg.gamma * q[cells, s2].max(-1) - q[cells, s, a]
+            q = q.at[cells, s, a].add(cfg.alpha * td)
+            info = {"mean_ms": mean_ms, "mean_acc": acc, "reward": r}
+            return q, counts2, scen2, info
+
+        return step
+
+    def _make_run(self):
+        """n environment steps for the whole fleet in ONE jitted lax.scan
+        call (amortizes dispatch; donation keeps the table in place)."""
+        step = self._make_step()
+        decay, eps_min = self.cfg.eps_decay, self.cfg.eps_min
+
+        def run(q, counts, scen, eps, key, n):
+            def body(carry, _):
+                q, counts, scen, eps, key = carry
+                key, k = jax.random.split(key)
+                q, counts, scen, info = step(q, counts, scen, eps, k)
+                eps = jnp.maximum(eps_min, eps * (1.0 - decay))
+                return (q, counts, scen, eps, key), (info["mean_ms"].mean(),
+                                                     info["mean_acc"].mean())
+            carry, (ms, acc) = jax.lax.scan(
+                body, (q, counts, scen, eps, key), None, length=n)
+            return carry, ms, acc
+
+        return run
+
+    def step(self):
+        """Advance every cell by one environment step (one jitted call)."""
+        self.key, k = jax.random.split(self.key)
+        self.q, self.counts, self.scen, info = self._step(
+            self.q, self.counts, self.scen, self.eps, k)
+        self.eps = max(self.cfg.eps_min,
+                       self.eps * (1.0 - self.cfg.eps_decay))
+        self.steps += 1
+        return info
+
+    def run(self, n: int):
+        """Advance every cell by ``n`` steps inside one jitted scan.
+        Returns per-step fleet-mean (ms, accuracy) traces of shape (n,)."""
+        self.key, k = jax.random.split(self.key)
+        (self.q, self.counts, self.scen, eps, _), ms, acc = self._run(
+            self.q, self.counts, self.scen, self.eps, k, n)
+        self.eps = float(eps)
+        self.steps += n
+        return np.asarray(ms), np.asarray(acc)
+
+    # ------------------------------------------------------------------
+    def _make_greedy(self):
+        """One vectorized greedy pass: (cells, N) decisions + (cells,)
+        action ids — shared by training checks and FleetOrchestrator."""
+        pu = self.pu_table
+
+        def greedy(q, counts, scen):
+            s = self._state_index(counts, scen)
+            a = q[jnp.arange(q.shape[0]), s].argmax(-1)
+            return pu[a], a
+
+        return greedy
+
+    def greedy_decisions(self) -> jnp.ndarray:
+        """(cells, N) per-user decisions from one vectorized greedy pass
+        at each cell's current state."""
+        return self._greedy(self.q, self.counts, self.scen)[0]
+
+    def train(self, max_steps: int, check_every: int = 200,
+              tol: float = 0.01, patience: int = 3) -> "FleetTrainResult":
+        """Train all cells; per-cell convergence = greedy expected response
+        within ``tol`` of that cell's brute-force optimum for ``patience``
+        consecutive checks (fleet analogue of ``train_agent``).
+
+        For dynamic fleets (Markov links / churn) the scenario — and so
+        the optimum — moves between checks; the oracle is then recomputed
+        per check, and "converged" means tracking the current optimum."""
+        fc = self.fleet_cfg
+        dynamic = bool(fc.p_r2w or fc.p_w2r or fc.p_join or fc.p_leave)
+        opt_ms = None                    # dynamic: computed per check instead
+        if not dynamic:
+            opt_ms = np.asarray(fleet_bruteforce(
+                self.scen, self.pu_table, self.cfg.accuracy_threshold)[0])
+        cells = self.scen.cells
+        converged_at = np.full(cells, -1, np.int64)
+        streak = np.zeros(cells, np.int64)
+        t0 = time.perf_counter()
+        history = []
+        for step in range(check_every, max_steps + 1, check_every):
+            self.run(check_every)
+            if dynamic:
+                opt_ms = np.asarray(fleet_bruteforce(
+                    self.scen, self.pu_table,
+                    self.cfg.accuracy_threshold)[0])
+            g_ms, g_acc = self.greedy_expected()
+            ok = np.asarray(dynamics.feasible(g_acc,
+                                              self.cfg.accuracy_threshold)
+                            & (g_ms <= opt_ms * (1 + tol)))
+            streak = np.where(ok, streak + 1, 0)
+            newly = (streak >= patience) & (converged_at < 0)
+            converged_at[newly] = step - (patience - 1) * check_every
+            frac = float((converged_at >= 0).mean())
+            history.append({"step": step, "frac_converged": frac,
+                            "median_greedy_ms": float(np.median(g_ms))})
+            if frac >= 1.0:
+                break
+        else:
+            if max_steps < check_every:      # loop never ran
+                g_ms, g_acc = self.greedy_expected()
+        if opt_ms is None:                   # dynamic fleet, loop never ran
+            opt_ms = np.asarray(fleet_bruteforce(
+                self.scen, self.pu_table, self.cfg.accuracy_threshold)[0])
+        return FleetTrainResult(
+            converged_at=converged_at, steps=self.steps,
+            frac_converged=float((converged_at >= 0).mean()),
+            optimal_ms=np.asarray(opt_ms), greedy_ms=np.asarray(g_ms),
+            greedy_acc=np.asarray(g_acc), history=history,
+            wall_seconds=time.perf_counter() - t0)
+
+    def greedy_expected(self):
+        """Noise-free (mean ms, mean acc) of each cell's greedy decision."""
+        per_user = self.greedy_decisions()
+        ms, acc = dynamics.fleet_expected_response(
+            per_user, self.scen.end_b, self.scen.edge_b, self.scen.member)
+        return np.asarray(ms), np.asarray(acc)
+
+
+@dataclasses.dataclass
+class FleetTrainResult:
+    converged_at: np.ndarray         # (cells,) step index, -1 = not yet
+    steps: int
+    frac_converged: float
+    optimal_ms: np.ndarray           # (cells,)
+    greedy_ms: np.ndarray            # (cells,)
+    greedy_acc: np.ndarray           # (cells,)
+    history: list
+    wall_seconds: float
+
+    @property
+    def cells_per_second(self) -> float:
+        """Converged cells per wall-clock second of training."""
+        n = int((self.converged_at >= 0).sum())
+        return n / max(self.wall_seconds, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+def fleet_bruteforce(scen: FleetScenario, pu_table: jnp.ndarray,
+                     threshold: float = 0.0, chunk: int = 4096):
+    """Per-cell brute-force optimum over the candidate action table.
+
+    Evaluates all K candidates for all cells (chunked over K to bound the
+    ``cells x chunk x N`` intermediate) under nominal load (all member
+    users requesting). Returns ((cells,) best ms, (cells,) best index).
+    """
+    member = scen.member
+    best_ms = jnp.full((scen.cells,), jnp.inf)
+    best_idx = jnp.zeros((scen.cells,), jnp.int32)
+    for lo in range(0, pu_table.shape[0], chunk):
+        pu = pu_table[lo:lo + chunk]                           # (k, N)
+        ms, acc = dynamics.fleet_actions_expected_response(
+            pu, scen.end_b, scen.edge_b, member)               # (cells, k)
+        ms = jnp.where(dynamics.feasible(acc, threshold, xp=jnp), ms,
+                       jnp.inf)
+        i = ms.argmin(-1)
+        m = jnp.take_along_axis(ms, i[:, None], -1)[:, 0]
+        better = m < best_ms
+        best_idx = jnp.where(better, i + lo, best_idx).astype(jnp.int32)
+        best_ms = jnp.where(better, m, best_ms)
+    if bool(jnp.isinf(best_ms).any()):
+        raise ValueError("no feasible action for threshold %.2f in %d cells"
+                         % (threshold, int(jnp.isinf(best_ms).sum())))
+    return best_ms, best_idx
+
+
+class FleetOrchestrator:
+    """Runtime policy head for a fleet: routes the decisions of every
+    cell from ONE vectorized greedy pass over the batched Q-table (the
+    fleet analogue of ``core.orchestrator.IntelligentOrchestrator``)."""
+
+    def __init__(self, agent: FleetQLearning):
+        self.agent = agent
+        self._route = agent._greedy
+
+    def route(self, scen: Optional[FleetScenario] = None,
+              counts: Optional[jnp.ndarray] = None):
+        """(cells, N) per-user tier/model decisions + (cells,) action ids
+        for the whole fleet, in one jitted argmax+gather."""
+        scen = scen if scen is not None else self.agent.scen
+        counts = counts if counts is not None else self.agent.counts
+        return self._route(self.agent.q, counts, scen)

@@ -1,0 +1,227 @@
+"""Scenario generation for fleets of end-edge-cloud cells.
+
+The paper evaluates four hand-written network patterns over one cell
+(Table 5: EXP-A..D). A production orchestrator trains and evaluates over
+*fleets*: thousands of cells whose link states, request arrivals, and
+user populations all vary over time. This module provides that layer as
+pure, seedable, jit-compatible generators over ``(cells, users)`` arrays:
+
+* **Markov-modulated links** — each end-node / edge backhaul link is a
+  two-state (Regular/Weak) Markov chain (`init_links` / `step_links`),
+  generalizing the static R/W patterns of Table 5.
+* **Poisson arrivals + diurnal load** — per-user request indicators
+  drawn from a Poisson process whose rate follows a day-night curve
+  (`poisson_active`, `diurnal_rate`).
+* **User churn** — users join/leave a cell as a Markov chain on an
+  active mask (`step_churn`).
+* **Heterogeneous cell sizes** — per-cell user counts drawn in
+  ``[min_users, max_users]``, realized as a padded active mask
+  (`heterogeneous_sizes`).
+
+`FleetScenario` composes all of the above behind `init_fleet` /
+`step_fleet`; `table5_fleet` replicates any paper scenario across a
+fleet for parity testing against the scalar environment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fleet.dynamics import EXPERIMENTS
+
+# ---------------------------------------------------------------------------
+# link-state dynamics (Markov-modulated Regular/Weak, generalizes Table 5)
+# ---------------------------------------------------------------------------
+
+
+def init_links(key, shape, p_weak: float = 0.3):
+    """Initial link states: 1 (Weak) w.p. ``p_weak``, else 0 (Regular)."""
+    return jax.random.bernoulli(key, p_weak, shape).astype(jnp.int32)
+
+
+def step_links(key, b, p_r2w: float = 0.05, p_w2r: float = 0.15):
+    """One Markov transition per link: Regular->Weak w.p. ``p_r2w``,
+    Weak->Regular w.p. ``p_w2r``. Stationary weak fraction is
+    ``p_r2w / (p_r2w + p_w2r)``."""
+    flip = jax.random.bernoulli(
+        key, jnp.where(b == 0, p_r2w, p_w2r), b.shape)
+    return jnp.where(flip, 1 - b, b).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# workload dynamics (arrivals, diurnal curves, churn, heterogeneity)
+# ---------------------------------------------------------------------------
+
+
+def diurnal_rate(t, period: int = 1440, base: float = 1.0,
+                 amplitude: float = 0.4, phase: float = 0.0):
+    """Request-rate multiplier following a day-night sinusoid; ``t`` is the
+    step index (array ok), ``period`` the steps per simulated day. The
+    multiplier averages ``base`` (default 1, so a composed
+    ``arrival_rate`` keeps its long-run mean) and is clamped at 0 when
+    ``amplitude > base``."""
+    m = base + amplitude * jnp.sin(2 * jnp.pi * (t / period + phase))
+    return jnp.maximum(m, 0.0)
+
+
+def poisson_active(key, shape, rate):
+    """Per-user request indicator for one step: True iff the user issued
+    >=1 request, i.e. w.p. ``1 - exp(-rate)`` (Poisson thinning)."""
+    p = 1.0 - jnp.exp(-jnp.asarray(rate))
+    return jax.random.bernoulli(key, p, shape)
+
+
+def step_churn(key, member, p_join: float = 0.02, p_leave: float = 0.02):
+    """Users join/leave the cell as a two-state Markov chain on the
+    membership mask."""
+    flip = jax.random.bernoulli(
+        key, jnp.where(member, p_leave, p_join), member.shape)
+    return jnp.where(flip, ~member, member)
+
+
+def heterogeneous_sizes(key, cells: int, max_users: int, min_users: int = 1,
+                        width: Optional[int] = None):
+    """Per-cell user counts in [min_users, max_users] and the matching
+    padded (cells, width) membership mask (width defaults to max_users)."""
+    sizes = jax.random.randint(key, (cells,), min_users, max_users + 1)
+    member = jnp.arange(width or max_users)[None, :] < sizes[:, None]
+    return sizes, member
+
+
+# ---------------------------------------------------------------------------
+# composition
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Knobs for a generated fleet. All dynamics are optional: with
+    ``p_r2w = p_w2r = 0`` links are static, with ``arrival_rate = None``
+    every member user is active each step, with ``p_join = p_leave = 0``
+    membership is fixed, and ``min_users = max_users`` makes cells
+    homogeneous (the paper's setting is cells=1, users<=5, all static)."""
+    cells: int
+    users: int = 5
+    # links
+    p_weak0: float = 0.3
+    p_r2w: float = 0.0
+    p_w2r: float = 0.0
+    # workload
+    arrival_rate: Optional[float] = None       # mean requests/user/step
+    diurnal_period: int = 0                    # 0 -> flat rate
+    diurnal_amplitude: float = 0.4
+    # population
+    p_join: float = 0.0
+    p_leave: float = 0.0
+    min_users: int = 5
+    max_users: int = 5
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FleetScenario:
+    """Array-of-structs network/workload state for a whole fleet.
+
+    end_b  : (cells, users) int32   per-end-node link state (0 R, 1 W)
+    edge_b : (cells,)       int32   edge backhaul link state
+    member : (cells, users) bool    user belongs to the cell (churn/size)
+    active : (cells, users) bool    member AND issued a request this step
+    t      : ()             int32   step counter (drives diurnal curve)
+    """
+    end_b: jnp.ndarray
+    edge_b: jnp.ndarray
+    member: jnp.ndarray
+    active: jnp.ndarray
+    t: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.end_b, self.edge_b, self.member, self.active, self.t),
+                None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def cells(self) -> int:
+        return self.end_b.shape[0]
+
+    @property
+    def users(self) -> int:
+        return self.end_b.shape[1]
+
+
+def init_fleet(key, cfg: FleetConfig) -> FleetScenario:
+    """Seedable initial fleet state for ``cfg``."""
+    k_end, k_edge, k_size, k_arr = jax.random.split(key, 4)
+    end_b = init_links(k_end, (cfg.cells, cfg.users), cfg.p_weak0)
+    edge_b = init_links(k_edge, (cfg.cells,), cfg.p_weak0)
+    hi = min(cfg.max_users, cfg.users)
+    lo = min(cfg.min_users, hi)          # a cap below min_users wins
+    if lo >= cfg.users:
+        member = jnp.ones((cfg.cells, cfg.users), bool)
+    else:
+        _, member = heterogeneous_sizes(k_size, cfg.cells, hi,
+                                        min_users=lo, width=cfg.users)
+    active = member & _arrivals(k_arr, cfg, member.shape, jnp.int32(0))
+    return FleetScenario(end_b, edge_b, member, active, jnp.int32(0))
+
+
+def _arrivals(key, cfg: FleetConfig, shape, t):
+    if cfg.arrival_rate is None:
+        return jnp.ones(shape, bool)
+    rate = cfg.arrival_rate
+    if cfg.diurnal_period:
+        rate = rate * diurnal_rate(t, cfg.diurnal_period,
+                                   amplitude=cfg.diurnal_amplitude)
+    return poisson_active(key, shape, rate)
+
+
+def step_fleet(key, s: FleetScenario, cfg: FleetConfig) -> FleetScenario:
+    """Advance every cell's exogenous state by one step (pure; jit/scan
+    friendly — ``FleetScenario`` is a registered pytree)."""
+    k_end, k_edge, k_churn, k_arr = jax.random.split(key, 4)
+    end_b, edge_b = s.end_b, s.edge_b
+    if cfg.p_r2w or cfg.p_w2r:
+        end_b = step_links(k_end, end_b, cfg.p_r2w, cfg.p_w2r)
+        edge_b = step_links(k_edge, edge_b, cfg.p_r2w, cfg.p_w2r)
+    member = s.member
+    if cfg.p_join or cfg.p_leave:
+        member = step_churn(k_churn, member, cfg.p_join, cfg.p_leave)
+    t = s.t + 1
+    active = member & _arrivals(k_arr, cfg, member.shape, t)
+    return FleetScenario(end_b, edge_b, member, active, t)
+
+
+def table5_fleet(name: str, cells: int, users: int = 5) -> FleetScenario:
+    """Replicate a paper Table-5 scenario (EXP-A..D) across ``cells``
+    identical cells — the bridge between the fleet simulator and the
+    paper's single-cell testbed."""
+    sc = EXPERIMENTS[name]
+    if users > len(sc.end_b):
+        raise ValueError("scenario must cover all users")
+    end_b = jnp.tile(jnp.asarray(sc.end_b[:users], jnp.int32)[None, :],
+                     (cells, 1))
+    edge_b = jnp.full((cells,), sc.edge_b, jnp.int32)
+    member = jnp.ones((cells, users), bool)
+    return FleetScenario(end_b, edge_b, member, member,
+                         jnp.int32(0))
+
+
+def mixed_table5_fleet(key, cells: int, users: int = 5) -> FleetScenario:
+    """A fleet whose cells are drawn uniformly from the four Table-5
+    scenarios — the smallest interesting heterogeneous fleet."""
+    names = list(EXPERIMENTS)
+    if users > min(len(EXPERIMENTS[n].end_b) for n in names):
+        raise ValueError("scenario must cover all users")
+    pick = np.asarray(jax.random.randint(key, (cells,), 0, len(names)))
+    end_b = np.stack([EXPERIMENTS[names[i]].end_b[:users] for i in pick])
+    edge_b = np.asarray([EXPERIMENTS[names[i]].edge_b for i in pick])
+    member = jnp.ones((cells, users), bool)
+    return FleetScenario(jnp.asarray(end_b, jnp.int32),
+                         jnp.asarray(edge_b, jnp.int32), member, member,
+                         jnp.int32(0))

@@ -1,0 +1,67 @@
+"""Exhaustive batch/scalar parity (ISSUE-1 satellite): the deduplicated
+latency kernel must agree with itself along every entry path, for every
+joint action at small N and for all four Table-5 scenarios."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import EXPERIMENTS, EndEdgeCloudEnv
+from repro.core.spaces import N_PER_USER_ACTIONS, SpaceSpec
+
+
+@pytest.mark.parametrize("n", [1, 2, 3])
+def test_decode_actions_batch_roundtrips_encode_action(n):
+    """decode_actions_batch o encode_action == id over the FULL space."""
+    spec = SpaceSpec(n)
+    all_per_user = np.array(list(itertools.product(
+        range(N_PER_USER_ACTIONS), repeat=n)), np.int64)
+    encoded = np.array([spec.encode_action(pu) for pu in all_per_user])
+    np.testing.assert_array_equal(encoded, spec.all_actions())
+    decoded = spec.decode_actions_batch(encoded)
+    np.testing.assert_array_equal(decoded, all_per_user)
+    # scalar decode agrees with the batch decode
+    for a in (0, 1, spec.n_joint_actions // 2, spec.n_joint_actions - 1):
+        assert tuple(decoded[a]) == spec.decode_action(int(a))
+
+
+@pytest.mark.parametrize("name", list(EXPERIMENTS))
+@pytest.mark.parametrize("n", [1, 2, 3])
+def test_expected_response_batch_matches_scalar_exhaustively(n, name):
+    """expected_response_batch == per-action expected_response for EVERY
+    joint action (10^n of them), on all four Table-5 scenarios."""
+    env = EndEdgeCloudEnv(n, EXPERIMENTS[name], noise=0)
+    acts = env.spec.all_actions()
+    ms, acc = env.expected_response_batch(acts)
+    for a in acts:
+        m1, a1 = env.expected_response(int(a))
+        assert abs(m1 - ms[a]) < 1e-9, (name, n, a)
+        assert abs(a1 - acc[a]) < 1e-12, (name, n, a)
+
+
+def test_feasibility_predicate_shared_across_paths():
+    """env.step, bruteforce_optimal, and the fleet reward must all use
+    dynamics.feasible — same slack rule, no scalar/batch disagreement."""
+    from repro.core import bruteforce_optimal
+    from repro.fleet import dynamics
+    th = 85.7405                       # contrived: inside isclose's old slack
+    assert not bool(dynamics.feasible(85.74, th))
+    env = EndEdgeCloudEnv(1, EXPERIMENTS["EXP-A"], accuracy_threshold=th,
+                          noise=0)
+    for a in env.spec.all_actions():
+        _, acc = env.expected_response(int(a))
+        _, r, info = env.step(int(a))
+        assert info["violated"] == (not bool(dynamics.feasible(acc, th)))
+        assert (r == -2.5) == info["violated"]
+    a, ms, acc, _ = bruteforce_optimal(env, th)
+    assert bool(dynamics.feasible(acc, th))
+
+
+def test_edge_memory_penalty_consistent_across_paths():
+    """The historical drift point: the edge memory-busy penalty at >2 edge
+    jobs must be identical in the scalar and batch paths."""
+    env = EndEdgeCloudEnv(3, EXPERIMENTS["EXP-A"], noise=0)
+    a = env.spec.encode_action([8, 8, 8])          # 3 edge jobs -> busy
+    ms_scalar, _ = env.expected_response(a)
+    ms_batch, _ = env.expected_response_batch(np.array([a]))
+    assert abs(ms_scalar - float(ms_batch[0])) < 1e-9
