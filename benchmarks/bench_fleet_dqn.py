@@ -1,0 +1,131 @@
+"""Fleet-scale shared-policy DQN (ISSUE-2 acceptance): RL-loop
+throughput of ``fleet.policy.FleetDQN`` vs the tabular
+``FleetQLearning``, per-step timing across fleet sizes (flat == no host
+sync inside the scan), and held-out convergence vs the brute-force
+oracle on mixed Table-5 fleets.
+
+Emits:
+  fleet_dqn_rl_steps,<us/env-step>,steps_per_s=... cells=...
+  fleet_dqn_vs_tabular,<ratio>,DQN/tabular RL-loop throughput
+  fleet_dqn_step_cells{n},<us/fleet-step>,one jitted step at n cells
+  fleet_dqn_step_flatness,<ratio>,largest/smallest per-step time ...
+  fleet_dqn_holdout_ratio,<ratio>,expected reward vs bruteforce ...
+  fleet_dqn_training,<us/cell-step>,converged_cells_per_s=...
+
+``--tiny`` (CLI) shrinks every budget to a few seconds of work — the CI
+smoke mode that keeps this script from rotting.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+from benchmarks.common import FAST, Timer, emit, save_json
+from repro.fleet import (FleetConfig, FleetDQN, FleetDQNConfig, FleetQConfig,
+                         FleetQLearning, holdout_reward_ratio,
+                         mixed_table5_fleet)
+
+USERS = 3
+THRESHOLD = 85.0
+
+
+def bench_rl(agent_cls, cells: int, steps: int, chunk: int, **kw) -> float:
+    """Full RL loop (act + env + replay/TD update) env-steps/sec."""
+    scen = mixed_table5_fleet(jax.random.PRNGKey(0), cells, USERS)
+    agent = agent_cls(scen, FleetConfig(cells=cells, users=USERS), **kw)
+    agent.run(chunk)                               # compile
+    n_chunks = max(1, steps // chunk)
+    with Timer() as t:
+        for _ in range(n_chunks):
+            ms, _ = agent.run(chunk)
+        jax.block_until_ready(ms)
+    return n_chunks * chunk * cells / t.seconds
+
+
+def bench_step_scaling(sizes, steps: int, chunk: int):
+    """us per fleet step (NOT per cell-step) at each fleet size: with
+    act + env + replay push + mini-batch update all inside one scan and
+    zero host sync, per-step wall time stays near-flat in fleet size
+    until the vectorized env work dominates the fixed-size update."""
+    out = {}
+    for cells in sizes:
+        sps = bench_rl(FleetDQN, cells, steps, chunk,
+                       cfg=FleetDQNConfig(), seed=0)
+        out[cells] = 1e6 / (sps / cells)           # us per fleet step
+        emit(f"fleet_dqn_step_cells{cells}", out[cells],
+             f"one jitted step (act+env+replay+update) at {cells} cells")
+    flat = max(out.values()) / min(out.values())
+    span = max(sizes) // min(sizes)
+    emit("fleet_dqn_step_flatness", flat,
+         f"largest/smallest per-step time over a {span}x size span "
+         f"(1.0 = perfectly flat; >> {span} would mean host sync)")
+    return out, flat
+
+
+def bench_holdout(train_cells: int, train_steps: int, hold_cells: int):
+    """Train one shared policy on 2-3-user Table-5 cells, score the
+    expected reward of its greedy decisions on a HELD-OUT fleet that
+    includes 1-user cells (a size absent from training) against the
+    per-cell brute-force optimum."""
+    train_scen = mixed_table5_fleet(jax.random.PRNGKey(0), train_cells,
+                                    USERS, min_users=2, max_users=3)
+    fc = FleetConfig(cells=train_cells, users=USERS, arrival_rate=1.2)
+    agent = FleetDQN(train_scen, fc,
+                     FleetDQNConfig(accuracy_threshold=THRESHOLD), seed=0)
+    with Timer() as t:
+        agent.run(train_steps)
+    hold = mixed_table5_fleet(jax.random.PRNGKey(99), hold_cells, USERS,
+                              min_users=1, max_users=3)
+    ratio = holdout_reward_ratio(agent, hold, THRESHOLD).ratio
+    emit("fleet_dqn_holdout_ratio", ratio,
+         f"expected reward vs bruteforce on {hold_cells} held-out cells "
+         f"incl. unseen sizes after {train_steps} steps (target >=0.95)")
+    return ratio, train_steps * train_cells / t.seconds
+
+
+def main(tiny: bool = False):
+    if tiny:
+        cells, steps, chunk = 16, 40, 20
+        sizes, tr_cells, tr_steps, hold = (8, 16), 16, 60, 16
+    elif FAST:
+        cells, steps, chunk = 256, 400, 50
+        sizes, tr_cells, tr_steps, hold = (64, 256), 128, 800, 128
+    else:
+        cells, steps, chunk = 1024, 2000, 50
+        sizes, tr_cells, tr_steps, hold = (64, 256, 1024), 256, 2000, 256
+
+    dqn_sps = bench_rl(FleetDQN, cells, steps, chunk,
+                       cfg=FleetDQNConfig(), seed=0)
+    tab_sps = bench_rl(FleetQLearning, cells, steps, chunk,
+                       cfg=FleetQConfig(eps_decay=0.0), seed=0)
+    emit("fleet_dqn_rl_steps", 1e6 / dqn_sps,
+         f"steps_per_s={dqn_sps:.0f} cells={cells} "
+         "(act+env+replay+minibatch update)")
+    emit("fleet_dqn_vs_tabular", dqn_sps / tab_sps,
+         f"DQN/tabular RL-loop throughput at {cells} cells "
+         f"(tabular {tab_sps:.0f} steps/s)")
+    per_step, flatness = bench_step_scaling(sizes, steps, chunk)
+    ratio, train_sps = bench_holdout(tr_cells, tr_steps, hold)
+    emit("fleet_dqn_training", 1e6 / train_sps,
+         f"cell-steps_per_s={train_sps:.0f} during holdout training")
+    metrics = {
+        "cells": cells, "users": USERS,
+        "dqn_rl_steps_per_s": dqn_sps,
+        "tabular_rl_steps_per_s": tab_sps,
+        "us_per_fleet_step": {str(k): v for k, v in per_step.items()},
+        "step_flatness": flatness,
+        "holdout_reward_ratio": ratio,
+        "train_cell_steps_per_s": train_sps,
+    }
+    save_json("fleet_dqn", metrics)
+    return metrics
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale budgets (CI smoke)")
+    main(tiny=ap.parse_args().tiny)

@@ -1,8 +1,13 @@
 """Benchmark runner: one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV rows (see common.emit).
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig5,table11]
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,table11] [--json]
   REPRO_BENCH_MODE=full for paper-scale RL budgets.
+
+``--json`` additionally writes ``results/BENCH_fleet.json``: the
+fleet-scale headline numbers (env steps/sec, tabular + DQN RL-loop
+steps/sec, converged cells/sec, DQN held-out reward ratio) in one
+machine-readable file so the perf trajectory is tracked across PRs.
 """
 import argparse
 import sys
@@ -10,10 +15,11 @@ import time
 
 from benchmarks import (bench_adaptation, bench_fig1_motivation,
                         bench_fig5_user_variability, bench_fig7_transfer,
-                        bench_fleet_throughput, bench_kernels,
-                        bench_overhead, bench_table8_decisions,
-                        bench_table9_constraints, bench_table10_sota,
-                        bench_table11_convergence)
+                        bench_fleet_dqn, bench_fleet_throughput,
+                        bench_kernels, bench_overhead,
+                        bench_table8_decisions, bench_table9_constraints,
+                        bench_table10_sota, bench_table11_convergence)
+from benchmarks.common import save_json
 
 SUITES = {
     "fig1": bench_fig1_motivation,
@@ -27,26 +33,51 @@ SUITES = {
     "kernels": bench_kernels,
     "adaptation": bench_adaptation,   # beyond-paper: mid-run network shift
     "fleet": bench_fleet_throughput,  # beyond-paper: vectorized fleet sim
+    "fleet_dqn": bench_fleet_dqn,     # beyond-paper: shared-policy fleet DQN
 }
+
+#: suites whose main() returns the headline dict folded into BENCH_fleet.json
+FLEET_SUITES = ("fleet", "fleet_dqn")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--json", action="store_true",
+                    help="write results/BENCH_fleet.json (fleet headline "
+                         "metrics; implies running the fleet suites)")
     args = ap.parse_args()
     names = list(SUITES) if not args.only else args.only.split(",")
+    if args.json:
+        names += [n for n in FLEET_SUITES if n not in names]
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = []
+    fleet_metrics = {}
     for name in names:
         print(f"# --- {name} ---", flush=True)
         try:
-            SUITES[name].main()
+            out = SUITES[name].main()
+            if name in FLEET_SUITES and isinstance(out, dict):
+                fleet_metrics[name] = out
         except Exception as e:  # noqa
             import traceback
             traceback.print_exc()
             failures.append((name, e))
+    if args.json:
+        tp = fleet_metrics.get("fleet", {})
+        dqn = fleet_metrics.get("fleet_dqn", {})
+        save_json("BENCH_fleet", {
+            "env_steps_per_s": tp.get("fleet_env_steps_per_s"),
+            "rl_steps_per_s": tp.get("fleet_rl_steps_per_s"),
+            "dqn_rl_steps_per_s": dqn.get("dqn_rl_steps_per_s"),
+            "converged_cells_per_s": tp.get("train_converged_cells_per_s"),
+            "dqn_holdout_reward_ratio": dqn.get("holdout_reward_ratio"),
+            "dqn_step_flatness": dqn.get("step_flatness"),
+            "suites": fleet_metrics,
+        })
+        print("# wrote results/BENCH_fleet.json", flush=True)
     print(f"# done in {time.time()-t0:.0f}s; failures: "
           f"{[n for n, _ in failures] or 'none'}")
     if failures:

@@ -3,14 +3,19 @@ their decisions with one vectorized greedy pass.
 
   PYTHONPATH=src python examples/fleet_quickstart.py
 
-Three acts:
+Four acts:
   1. spin up a heterogeneous fleet (cells drawn from the paper's four
      Table-5 scenarios) and batch-train tabular Q-learning — every host
      step advances EVERY cell inside one jitted call;
   2. check per-cell convergence against the vectorized brute-force
      oracle (the paper's "prediction accuracy" protocol, per cell);
   3. stand up a FleetOrchestrator and serve the whole fleet's routing
-     decisions from a single argmax+gather.
+     decisions from a single argmax+gather;
+  4. train ONE shared-policy FleetDQN on the pooled experience of the
+     fleet and route cells it has NEVER seen — including cell sizes
+     absent from training — at ~the brute-force optimum (the per-cell
+     Q-table cannot do this; see src/repro/fleet/README.md for the
+     tabular-vs-DQN decision guide).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -18,8 +23,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.fleet import (FleetConfig, FleetOrchestrator, FleetQConfig,
-                         FleetQLearning, init_fleet, mixed_table5_fleet)
+from repro.fleet import (FleetConfig, FleetDQN, FleetDQNConfig,
+                         FleetOrchestrator, FleetQConfig, FleetQLearning,
+                         holdout_reward_ratio, init_fleet,
+                         mixed_table5_fleet)
 
 CELLS, USERS = 256, 2
 
@@ -48,6 +55,26 @@ def main():
     local = (dec < 8).sum()
     print(f"routing {CELLS * USERS} users: {local} local, "
           f"{(dec == 8).sum()} edge, {(dec == 9).sum()} cloud")
+
+    # -- 4. ONE shared policy for the whole fleet — and for cells it
+    #    has never seen. Train a FleetDQN on 2-3-user cells under a QoS
+    #    goal (act + env + on-device replay + minibatch update, all in
+    #    one jitted scan), then score its cold-start decisions on a
+    #    held-out fleet that includes 1-user cells. ---------------------
+    users, th = 3, 85.0
+    train_scen = mixed_table5_fleet(jax.random.PRNGKey(2), 128, users,
+                                    min_users=2, max_users=3)
+    dqn = FleetDQN(train_scen,
+                   FleetConfig(cells=128, users=users, arrival_rate=1.2),
+                   FleetDQNConfig(accuracy_threshold=th), seed=0)
+    dqn.run(800)
+    hold = mixed_table5_fleet(jax.random.PRNGKey(9), 64, users,
+                              min_users=1, max_users=3)
+    ev = holdout_reward_ratio(dqn, hold, th)
+    print(f"shared DQN on 64 held-out cells (sizes 1-3, trained on 2-3): "
+          f"{100 * ev.ratio:.1f}% of the brute-force optimal reward, "
+          f"{100 * ev.feasible.mean():.0f}% QoS-feasible")
+    FleetOrchestrator(dqn).route(scen=hold)   # same serving entry point
 
     # -- bonus: a fully dynamic fleet (Markov links, diurnal Poisson
     #    load, churn, heterogeneous sizes) steps just as cheaply --------

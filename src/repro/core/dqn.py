@@ -28,9 +28,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.networks import make_factored_q, mlp_apply, mlp_init
 from repro.core.replay import ReplayBuffer
-from repro.core.spaces import N_PER_USER_ACTIONS, SpaceSpec
-from repro.training.optimizer import AdamWConfig, apply_updates, init_opt_state
+from repro.core.spaces import (N_PER_USER_ACTIONS, SpaceSpec,
+                               allowed_per_user)
+from repro.training.optimizer import (apply_updates, constant_lr_adamw,
+                                      init_opt_state)
 
 PAPER_HIDDEN = {1: 32, 2: 32, 3: 48, 4: 64, 5: 128}
 PAPER_EPS_DECAY = {3: 0.4, 4: 0.7, 5: 0.9}    # Table 7 (per 1000 steps here)
@@ -50,22 +53,8 @@ class DQNConfig:
     form: str = "paper"               # 'paper' | 'factored'
 
 
-def _mlp_init(key, sizes):
-    params = []
-    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
-        k1, key = jax.random.split(key)
-        params.append({"w": jax.random.normal(k1, (a, b), jnp.float32)
-                       * np.sqrt(2.0 / a),
-                       "b": jnp.zeros((b,), jnp.float32)})
-    return params
-
-
-def _mlp_apply(params, x):
-    for i, lyr in enumerate(params):
-        x = x @ lyr["w"] + lyr["b"]
-        if i < len(params) - 1:
-            x = jax.nn.relu(x)
-    return x
+# MLP pieces live in core.networks (shared with repro.fleet.policy).
+_mlp_init, _mlp_apply = mlp_init, mlp_apply
 
 
 class DQNAgent:
@@ -103,13 +92,8 @@ class DQNAgent:
             self.params = _mlp_init(key, [spec.state_dim, h, h, out])
             self._avecs = None
             # per-user local action ids implied by self.actions:
-            pu = self.spec.decode_actions_batch(self.actions)
-            self._allowed = np.zeros((spec.n_users, N_PER_USER_ACTIONS), bool)
-            for u in range(spec.n_users):
-                self._allowed[u, np.unique(pu[:, u])] = True
-        self.opt_cfg = AdamWConfig(lr=self.cfg.lr, warmup_steps=0,
-                                   total_steps=10**9, weight_decay=0.0,
-                                   grad_clip=10.0, min_lr_frac=1.0)
+            self._allowed = allowed_per_user(spec, self.actions)
+        self.opt_cfg = constant_lr_adamw(self.cfg.lr)
         self.opt = init_opt_state(self.params)
         self._build_fns()
 
@@ -117,11 +101,9 @@ class DQNAgent:
     def _build_fns(self):
         form = self.cfg.form
         gamma = self.cfg.gamma
-        n, na = self.spec.n_users, N_PER_USER_ACTIONS
+        n = self.spec.n_users
 
-        opt_cfg = AdamWConfig(lr=self.cfg.lr, warmup_steps=0,
-                              total_steps=10**9, weight_decay=0.0,
-                              grad_clip=10.0, min_lr_frac=1.0)
+        opt_cfg = self.opt_cfg
 
         if form == "paper":
             def q_all(params, svec, avecs):
@@ -146,12 +128,7 @@ class DQNAgent:
             self._q_all = jax.jit(q_all)
             self._train = jax.jit(train)
         else:
-            allowed = jnp.asarray(self._allowed)
-
-            def per_user_q(params, s):
-                """(B, state_dim) -> (B, N, NA) with disallowed = -inf"""
-                q = _mlp_apply(params, s).reshape(-1, n, na)
-                return jnp.where(allowed[None], q, -1e30)
+            per_user_q = make_factored_q(n, self._allowed)
 
             def loss_fn(params, s, aidx, r, s2):
                 q = per_user_q(params, s)                       # (B,N,NA)

@@ -1,0 +1,53 @@
+"""Small fully-connected Q-networks shared by the scalar DQN agent
+(``core.dqn``, paper Algorithm 2) and the fleet-scale shared-policy DQN
+(``repro.fleet.policy``).
+
+Two pieces live here so the two agents can never drift:
+
+* ``mlp_init`` / ``mlp_apply`` — the paper's two-hidden-layer MLP (§5.4)
+  as plain pytrees (list of {"w", "b"}), He-initialized, ReLU.
+* ``make_factored_q`` — the VDN-style factored head: the network maps a
+  state vector to ``n_users x N_PER_USER_ACTIONS`` per-user action
+  values and the joint Q is their (masked) sum. Disallowed per-user
+  actions are pinned to -1e30 so argmax / max never select them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spaces import N_PER_USER_ACTIONS
+
+
+def mlp_init(key, sizes):
+    """He-initialized MLP params for layer ``sizes`` (list of widths)."""
+    params = []
+    for a, b in zip(sizes[:-1], sizes[1:]):
+        k1, key = jax.random.split(key)
+        params.append({"w": jax.random.normal(k1, (a, b), jnp.float32)
+                       * np.sqrt(2.0 / a),
+                       "b": jnp.zeros((b,), jnp.float32)})
+    return params
+
+
+def mlp_apply(params, x):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def make_factored_q(n_users: int, allowed):
+    """Factored per-user Q head over an ``(n_users, N_PER_USER_ACTIONS)``
+    allowed-action mask. Returns ``per_user_q(params, s)`` mapping
+    ``(B, state_dim) -> (B, n_users, N_PER_USER_ACTIONS)`` with
+    disallowed entries at -1e30."""
+    allowed = jnp.asarray(allowed)
+
+    def per_user_q(params, s):
+        q = mlp_apply(params, s).reshape(-1, n_users, N_PER_USER_ACTIONS)
+        return jnp.where(allowed[None], q, -1e30)
+
+    return per_user_q

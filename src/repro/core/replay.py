@@ -1,8 +1,24 @@
 """FIFO experience replay (paper Algorithm 2, §5.4: capacity 1000,
-mini-batch 64)."""
+mini-batch 64).
+
+This is the host-side (numpy) buffer used by the scalar ``DQNAgent``'s
+Python training loop; its one-at-a-time ``push`` never wraps mid-write,
+so it indexes with the bare ``ptr``. The fleet-scale agent keeps its
+pooled experience on device instead — see ``repro.fleet.replay`` — and
+pushes whole batches, whose wraparound slot arithmetic lives in
+``ring_slots`` below (here so both ring layouts are defined in one
+module).
+"""
 from __future__ import annotations
 
 import numpy as np
+
+
+def ring_slots(ptr, n, capacity, xp=np):
+    """The ``n`` ring-buffer slots written by a push starting at ``ptr``
+    (wraps modulo ``capacity``). ``xp`` selects numpy vs jax.numpy so the
+    host and on-device buffers index identically."""
+    return (ptr + xp.arange(n)) % capacity
 
 
 class ReplayBuffer:
@@ -27,5 +43,9 @@ class ReplayBuffer:
 
     def sample(self, batch: int):
         n = len(self)
+        if n == 0:
+            raise ValueError(
+                "cannot sample from an empty ReplayBuffer: push at least "
+                "one transition before calling sample()")
         idx = self.rng.integers(0, n, size=batch)
         return self.s[idx], self.a[idx], self.r[idx], self.s2[idx]

@@ -97,6 +97,17 @@ class SpaceSpec:
         return v.reshape(k, -1)
 
 
+def allowed_per_user(spec: SpaceSpec, actions) -> np.ndarray:
+    """(n_users, N_PER_USER_ACTIONS) bool mask of the per-user action ids
+    that appear in a joint candidate set — the factored DQN's action mask
+    (shared by ``core.dqn`` and ``repro.fleet.policy``)."""
+    pu = spec.decode_actions_batch(np.asarray(actions, np.int64))
+    mask = np.zeros((spec.n_users, N_PER_USER_ACTIONS), bool)
+    for u in range(spec.n_users):
+        mask[u, np.unique(pu[:, u])] = True
+    return mask
+
+
 def restricted_actions(spec: SpaceSpec) -> np.ndarray:
     """SOTA [36] baseline action set: computation offloading only, always
     the most-accurate model -> per-user {local d0, edge, cloud} = 3^N."""

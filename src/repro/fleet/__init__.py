@@ -24,13 +24,18 @@ _SCENARIOS = ("FleetConfig", "FleetScenario", "diurnal_rate",
               "step_fleet", "step_links", "table5_fleet")
 _POPULATION = ("FleetOrchestrator", "FleetQConfig", "FleetQLearning",
                "FleetTrainResult", "default_actions", "fleet_bruteforce",
-               "make_fleet_env_step", "simulate_responses")
+               "make_fleet_env_step", "simulate_responses",
+               "train_against_oracle")
+_REPLAY = ("FleetReplay", "replay_init", "replay_push", "replay_sample",
+           "replay_size")
+_POLICY = ("FleetDQN", "FleetDQNConfig", "HoldoutEval",
+           "encode_fleet_state", "holdout_reward_ratio")
 
 __all__ = [
     "dynamics", "accuracies", "cell_response_times", "expected_response",
     "feasible", "fleet_actions_expected_response",
     "fleet_expected_response", "response_times", "reward", "t_comp_device",
-    *_SCENARIOS, *_POPULATION,
+    *_SCENARIOS, *_POPULATION, *_REPLAY, *_POLICY,
 ]
 
 
@@ -40,7 +45,12 @@ def __getattr__(name):
         mod = importlib.import_module("repro.fleet.scenarios")
     elif name in _POPULATION or name == "population":
         mod = importlib.import_module("repro.fleet.population")
+    elif name in _REPLAY or name == "replay":
+        mod = importlib.import_module("repro.fleet.replay")
+    elif name in _POLICY or name == "policy":
+        mod = importlib.import_module("repro.fleet.policy")
     else:
         raise AttributeError(
             f"module 'repro.fleet' has no attribute {name!r}")
-    return mod if name in ("scenarios", "population") else getattr(mod, name)
+    return (mod if name in ("scenarios", "population", "replay", "policy")
+            else getattr(mod, name))

@@ -240,63 +240,110 @@ class FleetQLearning:
         at each cell's current state."""
         return self._greedy(self.q, self.counts, self.scen)[0]
 
+    @property
+    def accuracy_threshold(self) -> float:
+        return self.cfg.accuracy_threshold
+
+    def policy_decisions(self, counts, scen):
+        """(cells, N) per-user decisions + (cells,) action ids from one
+        vectorized greedy pass over the batched Q-table (the
+        FleetOrchestrator entry point, shared with ``FleetDQN``).
+
+        Each cell's table is tied to the fleet it trained on, so unlike
+        the shared-policy DQN this agent cannot serve a held-out fleet —
+        ``scen`` may vary link/membership state but must have this
+        agent's cells."""
+        if scen.users != self.spec.n_users:
+            raise ValueError(
+                f"FleetQLearning indexes states for fleets padded to "
+                f"{self.spec.n_users} users; got a {scen.users}-wide "
+                "scenario")
+        if scen.cells != self.q.shape[0]:
+            raise ValueError(
+                f"FleetQLearning holds one Q-table per trained cell "
+                f"({self.q.shape[0]}); it cannot route a {scen.cells}-cell "
+                "scenario — use the shared-policy fleet.policy.FleetDQN "
+                "for held-out fleets")
+        return self._greedy(self.q, counts, scen)
+
     def train(self, max_steps: int, check_every: int = 200,
               tol: float = 0.01, patience: int = 3) -> "FleetTrainResult":
         """Train all cells; per-cell convergence = greedy expected response
         within ``tol`` of that cell's brute-force optimum for ``patience``
-        consecutive checks (fleet analogue of ``train_agent``).
+        consecutive checks (fleet analogue of ``train_agent``)."""
+        return train_against_oracle(self, max_steps, check_every=check_every,
+                                    tol=tol, patience=patience)
 
-        For dynamic fleets (Markov links / churn) the scenario — and so
-        the optimum — moves between checks; the oracle is then recomputed
-        per check, and "converged" means tracking the current optimum."""
-        fc = self.fleet_cfg
-        dynamic = bool(fc.p_r2w or fc.p_w2r or fc.p_join or fc.p_leave)
-        opt_ms = None                    # dynamic: computed per check instead
-        if not dynamic:
-            opt_ms = np.asarray(fleet_bruteforce(
-                self.scen, self.pu_table, self.cfg.accuracy_threshold)[0])
-        cells = self.scen.cells
-        converged_at = np.full(cells, -1, np.int64)
-        streak = np.zeros(cells, np.int64)
-        t0 = time.perf_counter()
-        history = []
-        for step in range(check_every, max_steps + 1, check_every):
-            self.run(check_every)
-            if dynamic:
-                opt_ms = np.asarray(fleet_bruteforce(
-                    self.scen, self.pu_table,
-                    self.cfg.accuracy_threshold)[0])
-            g_ms, g_acc = self.greedy_expected()
-            ok = np.asarray(dynamics.feasible(g_acc,
-                                              self.cfg.accuracy_threshold)
-                            & (g_ms <= opt_ms * (1 + tol)))
-            streak = np.where(ok, streak + 1, 0)
-            newly = (streak >= patience) & (converged_at < 0)
-            converged_at[newly] = step - (patience - 1) * check_every
-            frac = float((converged_at >= 0).mean())
-            history.append({"step": step, "frac_converged": frac,
-                            "median_greedy_ms": float(np.median(g_ms))})
-            if frac >= 1.0:
-                break
-        else:
-            if max_steps < check_every:      # loop never ran
-                g_ms, g_acc = self.greedy_expected()
-        if opt_ms is None:                   # dynamic fleet, loop never ran
-            opt_ms = np.asarray(fleet_bruteforce(
-                self.scen, self.pu_table, self.cfg.accuracy_threshold)[0])
-        return FleetTrainResult(
-            converged_at=converged_at, steps=self.steps,
-            frac_converged=float((converged_at >= 0).mean()),
-            optimal_ms=np.asarray(opt_ms), greedy_ms=np.asarray(g_ms),
-            greedy_acc=np.asarray(g_acc), history=history,
-            wall_seconds=time.perf_counter() - t0)
-
-    def greedy_expected(self):
-        """Noise-free (mean ms, mean acc) of each cell's greedy decision."""
-        per_user = self.greedy_decisions()
+    def greedy_expected(self, scen: Optional[FleetScenario] = None,
+                        counts=None):
+        """Noise-free (mean ms, mean acc) of each cell's greedy decision.
+        Accepts ``scen``/``counts`` for API parity with ``FleetDQN`` (so
+        ``holdout_reward_ratio`` takes either agent), but the per-cell
+        tables only serve this agent's own fleet — a genuinely held-out
+        scenario raises via ``policy_decisions``."""
+        eval_scen = scen if scen is not None else self.scen
+        if counts is None:
+            counts = (self.counts if scen is None else
+                      jnp.zeros((eval_scen.cells, 2), jnp.int32))
+        per_user = self.policy_decisions(counts, eval_scen)[0]
         ms, acc = dynamics.fleet_expected_response(
-            per_user, self.scen.end_b, self.scen.edge_b, self.scen.member)
+            per_user, eval_scen.end_b, eval_scen.edge_b, eval_scen.member)
         return np.asarray(ms), np.asarray(acc)
+
+
+def train_against_oracle(agent, max_steps: int, check_every: int = 200,
+                         tol: float = 0.01,
+                         patience: int = 3) -> "FleetTrainResult":
+    """THE fleet training loop, shared by ``FleetQLearning`` and
+    ``fleet.policy.FleetDQN`` (anything with ``run`` /
+    ``greedy_expected`` / ``scen`` / ``pu_table`` / ``fleet_cfg`` /
+    ``accuracy_threshold``): per-cell convergence = greedy expected
+    response within ``tol`` of that cell's brute-force optimum for
+    ``patience`` consecutive checks (fleet analogue of ``train_agent``).
+
+    For dynamic fleets (Markov links / churn) the scenario — and so the
+    optimum — moves between checks; the oracle is then recomputed per
+    check, and "converged" means tracking the current optimum."""
+    fc = agent.fleet_cfg
+    threshold = agent.accuracy_threshold
+    dynamic = bool(fc.p_r2w or fc.p_w2r or fc.p_join or fc.p_leave)
+    opt_ms = None                        # dynamic: computed per check instead
+    if not dynamic:
+        opt_ms = np.asarray(fleet_bruteforce(
+            agent.scen, agent.pu_table, threshold)[0])
+    cells = agent.scen.cells
+    converged_at = np.full(cells, -1, np.int64)
+    streak = np.zeros(cells, np.int64)
+    t0 = time.perf_counter()
+    history = []
+    for step in range(check_every, max_steps + 1, check_every):
+        agent.run(check_every)
+        if dynamic:
+            opt_ms = np.asarray(fleet_bruteforce(
+                agent.scen, agent.pu_table, threshold)[0])
+        g_ms, g_acc = agent.greedy_expected()
+        ok = np.asarray(dynamics.feasible(g_acc, threshold)
+                        & (g_ms <= opt_ms * (1 + tol)))
+        streak = np.where(ok, streak + 1, 0)
+        newly = (streak >= patience) & (converged_at < 0)
+        converged_at[newly] = step - (patience - 1) * check_every
+        frac = float((converged_at >= 0).mean())
+        history.append({"step": step, "frac_converged": frac,
+                        "median_greedy_ms": float(np.median(g_ms))})
+        if frac >= 1.0:
+            break
+    else:
+        if max_steps < check_every:          # loop never ran
+            g_ms, g_acc = agent.greedy_expected()
+    if opt_ms is None:                       # dynamic fleet, loop never ran
+        opt_ms = np.asarray(fleet_bruteforce(
+            agent.scen, agent.pu_table, threshold)[0])
+    return FleetTrainResult(
+        converged_at=converged_at, steps=agent.steps,
+        frac_converged=float((converged_at >= 0).mean()),
+        optimal_ms=np.asarray(opt_ms), greedy_ms=np.asarray(g_ms),
+        greedy_acc=np.asarray(g_acc), history=history,
+        wall_seconds=time.perf_counter() - t0)
 
 
 @dataclasses.dataclass
@@ -348,17 +395,26 @@ def fleet_bruteforce(scen: FleetScenario, pu_table: jnp.ndarray,
 
 class FleetOrchestrator:
     """Runtime policy head for a fleet: routes the decisions of every
-    cell from ONE vectorized greedy pass over the batched Q-table (the
-    fleet analogue of ``core.orchestrator.IntelligentOrchestrator``)."""
+    cell from ONE vectorized greedy pass (the fleet analogue of
+    ``core.orchestrator.IntelligentOrchestrator``). Accepts any agent
+    exposing ``policy_decisions(counts, scen)`` — the batched tabular
+    ``FleetQLearning`` or the shared-policy ``fleet.policy.FleetDQN``."""
 
-    def __init__(self, agent: FleetQLearning):
+    def __init__(self, agent):
         self.agent = agent
-        self._route = agent._greedy
 
     def route(self, scen: Optional[FleetScenario] = None,
               counts: Optional[jnp.ndarray] = None):
         """(cells, N) per-user tier/model decisions + (cells,) action ids
-        for the whole fleet, in one jitted argmax+gather."""
-        scen = scen if scen is not None else self.agent.scen
-        counts = counts if counts is not None else self.agent.counts
-        return self._route(self.agent.q, counts, scen)
+        for the whole fleet, in one jitted greedy pass. A held-out
+        ``scen`` without ``counts`` is routed cold (zero job counts);
+        routing a fleet the agent never trained on needs a policy that
+        transfers — ``fleet.policy.FleetDQN`` (the tabular agent raises
+        on a cell-count mismatch)."""
+        if scen is None:
+            scen = self.agent.scen
+            if counts is None:
+                counts = self.agent.counts
+        elif counts is None:
+            counts = jnp.zeros((scen.cells, 2), jnp.int32)
+        return self.agent.policy_decisions(counts, scen)

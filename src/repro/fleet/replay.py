@@ -1,0 +1,110 @@
+"""On-device experience replay for fleet-scale training.
+
+The scalar agent's ``core.replay.ReplayBuffer`` is host-side numpy: one
+``push`` per transition, one ``sample`` per update, each crossing the
+host-device boundary. A fleet pushes *cells* transitions per environment
+step and trains inside a ``lax.scan`` — the buffer therefore has to be a
+pure pytree of device arrays so push/sample can live inside the jitted
+step with zero host sync, and donate like the fleet Q-table.
+
+``FleetReplay`` is exactly that: state/action/reward/next-state rows
+plus ``ptr``/``full`` as jax scalars. ``replay_push`` writes a whole
+``(B, ...)`` batch of transitions at the ring position (wraparound
+indices come from ``core.replay.ring_slots``, the single source of the
+ring arithmetic), and ``replay_sample`` draws a uniform mini-batch from
+the filled prefix. Both are pure functions of (buffer, arrays) -> arrays
+— jit, scan, and donation friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.replay import ring_slots
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FleetReplay:
+    """Ring buffer of transitions as a registered pytree.
+
+    s    : (capacity, state_dim) f32   states
+    a    : (capacity, *action_shape) i32 actions (per-user ids for fleet)
+    r    : (capacity,) f32             rewards
+    s2   : (capacity, state_dim) f32   next states
+    ptr  : () i32                      next write position
+    full : () bool                     True once the ring has wrapped
+    """
+    s: jnp.ndarray
+    a: jnp.ndarray
+    r: jnp.ndarray
+    s2: jnp.ndarray
+    ptr: jnp.ndarray
+    full: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.s, self.a, self.r, self.s2, self.ptr, self.full),
+                None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.s.shape[0]
+
+    def __len__(self):
+        """Host-side convenience; inside jit use ``replay_size``."""
+        return int(replay_size(self))
+
+
+def replay_init(capacity: int, state_dim: int, action_shape=()) -> FleetReplay:
+    """An empty on-device buffer for ``capacity`` transitions."""
+    return FleetReplay(
+        s=jnp.zeros((capacity, state_dim), jnp.float32),
+        a=jnp.zeros((capacity, *action_shape), jnp.int32),
+        r=jnp.zeros((capacity,), jnp.float32),
+        s2=jnp.zeros((capacity, state_dim), jnp.float32),
+        ptr=jnp.int32(0),
+        full=jnp.asarray(False))
+
+
+def replay_size(buf: FleetReplay):
+    """Number of valid transitions, as a traced i32 scalar."""
+    return jnp.where(buf.full, buf.capacity, buf.ptr).astype(jnp.int32)
+
+
+def replay_push(buf: FleetReplay, s, a, r, s2) -> FleetReplay:
+    """Write a ``(B, ...)`` batch of transitions at the ring position.
+
+    B is a static shape, so the wraparound scatter indices are computed
+    with ``ring_slots`` under jit; pushing more rows than the buffer
+    holds is a usage error caught at trace time.
+    """
+    n = s.shape[0]
+    if n > buf.capacity:
+        raise ValueError(f"pushing {n} transitions into a capacity-"
+                         f"{buf.capacity} FleetReplay would self-overwrite")
+    idx = ring_slots(buf.ptr, n, buf.capacity, xp=jnp)
+    return FleetReplay(
+        s=buf.s.at[idx].set(s),
+        a=buf.a.at[idx].set(a.astype(buf.a.dtype)),
+        r=buf.r.at[idx].set(r),
+        s2=buf.s2.at[idx].set(s2),
+        ptr=((buf.ptr + n) % buf.capacity).astype(jnp.int32),
+        full=buf.full | (buf.ptr + n >= buf.capacity))
+
+
+def replay_sample(key, buf: FleetReplay, batch: int):
+    """Uniform mini-batch (s, a, r, s2) from the filled prefix.
+
+    Sampling an empty buffer is undefined (rows are zeros); callers
+    inside a scan push before they sample, so the clamp to >=1 below
+    only guards the never-pushed case against an out-of-bounds gather.
+    """
+    n = jnp.maximum(replay_size(buf), 1)
+    idx = jax.random.randint(key, (batch,), 0, n)
+    return buf.s[idx], buf.a[idx], buf.r[idx], buf.s2[idx]

@@ -212,16 +212,29 @@ def table5_fleet(name: str, cells: int, users: int = 5) -> FleetScenario:
                          jnp.int32(0))
 
 
-def mixed_table5_fleet(key, cells: int, users: int = 5) -> FleetScenario:
+def mixed_table5_fleet(key, cells: int, users: int = 5,
+                       min_users: Optional[int] = None,
+                       max_users: Optional[int] = None) -> FleetScenario:
     """A fleet whose cells are drawn uniformly from the four Table-5
-    scenarios — the smallest interesting heterogeneous fleet."""
+    scenarios — the smallest interesting heterogeneous fleet.
+
+    ``min_users``/``max_users`` additionally draw per-cell sizes in that
+    range (padded to ``users``), e.g. to train a shared policy on sizes
+    {2, 3} and hold out size-1 cells it never saw."""
     names = list(EXPERIMENTS)
     if users > min(len(EXPERIMENTS[n].end_b) for n in names):
         raise ValueError("scenario must cover all users")
-    pick = np.asarray(jax.random.randint(key, (cells,), 0, len(names)))
+    k_pick, k_size = jax.random.split(key)
+    pick = np.asarray(jax.random.randint(k_pick, (cells,), 0, len(names)))
     end_b = np.stack([EXPERIMENTS[names[i]].end_b[:users] for i in pick])
     edge_b = np.asarray([EXPERIMENTS[names[i]].edge_b for i in pick])
-    member = jnp.ones((cells, users), bool)
+    if min_users is None and max_users is None:
+        member = jnp.ones((cells, users), bool)
+    else:
+        hi = min(max_users if max_users is not None else users, users)
+        lo = min(min_users if min_users is not None else 1, hi)
+        _, member = heterogeneous_sizes(k_size, cells, hi, min_users=lo,
+                                        width=users)
     return FleetScenario(jnp.asarray(end_b, jnp.int32),
                          jnp.asarray(edge_b, jnp.int32), member, member,
                          jnp.int32(0))

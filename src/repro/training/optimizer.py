@@ -28,6 +28,15 @@ class AdamWConfig:
     min_lr_frac: float = 0.1
 
 
+def constant_lr_adamw(lr: float, grad_clip: float = 10.0) -> AdamWConfig:
+    """The RL agents' optimizer: constant LR (no warmup, no decay), no
+    weight decay — shared by ``core.dqn`` and ``repro.fleet.policy`` so
+    the scalar and fleet DQNs can't drift apart."""
+    return AdamWConfig(lr=lr, warmup_steps=0, total_steps=10**9,
+                       weight_decay=0.0, grad_clip=grad_clip,
+                       min_lr_frac=1.0)
+
+
 def init_opt_state(params):
     zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
     return {"m": jax.tree_util.tree_map(zeros, params),

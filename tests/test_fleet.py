@@ -149,6 +149,62 @@ def test_idle_cell_not_penalized_under_threshold():
     assert (np.asarray(counts) == 0).all()
 
 
+def test_churn_extremes_empty_and_refill_the_cell():
+    """p_join=0 / p_leave=1 deterministically empties the membership in
+    one step (and the mirror extreme refills it) — the Markov chain's
+    absorbing corners, not just its stationary middle."""
+    key = jax.random.PRNGKey(0)
+    member = jnp.asarray(np.random.default_rng(0).random((64, 5)) < 0.5)
+    gone = step_churn(key, member, p_join=0.0, p_leave=1.0)
+    assert not bool(np.asarray(gone).any())
+    everyone = step_churn(key, member, p_join=1.0, p_leave=0.0)
+    assert bool(np.asarray(everyone).all())
+    # and the empty cell stays empty under p_join=0
+    still_gone = step_churn(key, gone, p_join=0.0, p_leave=1.0)
+    assert not bool(np.asarray(still_gone).any())
+
+
+def test_heterogeneous_sizes_degenerate_range_is_homogeneous():
+    """min_users == max_users collapses the draw: every cell gets exactly
+    that size, mask padded to ``width``."""
+    for k in (1, 3, 5):
+        sizes, mask = heterogeneous_sizes(jax.random.PRNGKey(1), 32, k,
+                                          min_users=k, width=5)
+        assert (np.asarray(sizes) == k).all()
+        assert mask.shape == (32, 5)
+        assert (np.asarray(mask).sum(1) == k).all()
+        # padded mask is a prefix mask: users [0, k) present, rest absent
+        assert (np.asarray(mask) == (np.arange(5)[None, :] < k)).all()
+
+
+def test_step_fleet_is_deterministic_under_a_fixed_key():
+    """Same key + same state -> bit-identical next state, jitted or not;
+    different keys diverge (the generators are pure functions of key)."""
+    cfg = FleetConfig(cells=48, users=5, p_r2w=0.1, p_w2r=0.2,
+                      arrival_rate=0.9, diurnal_period=50,
+                      p_join=0.05, p_leave=0.05, min_users=1, max_users=5)
+    s0 = init_fleet(jax.random.PRNGKey(3), cfg)
+    k = jax.random.PRNGKey(7)
+    a = step_fleet(k, s0, cfg)
+    b = step_fleet(k, s0, cfg)
+    c = jax.jit(lambda k, s: step_fleet(k, s, cfg))(k, s0)
+    for x, y in ((a, b), (a, c)):
+        np.testing.assert_array_equal(np.asarray(x.end_b), np.asarray(y.end_b))
+        np.testing.assert_array_equal(np.asarray(x.edge_b),
+                                      np.asarray(y.edge_b))
+        np.testing.assert_array_equal(np.asarray(x.member),
+                                      np.asarray(y.member))
+        np.testing.assert_array_equal(np.asarray(x.active),
+                                      np.asarray(y.active))
+    d = step_fleet(jax.random.PRNGKey(8), s0, cfg)
+    assert (np.asarray(a.end_b) != np.asarray(d.end_b)).any() or \
+           (np.asarray(a.active) != np.asarray(d.active)).any()
+    # init_fleet is deterministic in its key too
+    np.testing.assert_array_equal(
+        np.asarray(init_fleet(jax.random.PRNGKey(3), cfg).member),
+        np.asarray(s0.member))
+
+
 def test_composed_fleet_steps_under_jit():
     cfg = FleetConfig(cells=32, users=5, p_r2w=0.05, p_w2r=0.2,
                       arrival_rate=0.8, diurnal_period=100,
@@ -229,3 +285,15 @@ def test_fleet_orchestrator_single_vectorized_greedy_pass():
                                   np.asarray(agent.greedy_decisions()))
     pu = np.asarray(agent.pu_table)
     np.testing.assert_array_equal(np.asarray(dec), pu[np.asarray(ids)])
+
+
+def test_tabular_agent_refuses_held_out_fleet():
+    """Per-cell Q-tables don't transfer: routing a fleet with a
+    different cell count must fail loudly, not gather garbage (the
+    shared-policy FleetDQN is the held-out path)."""
+    scen = mixed_table5_fleet(jax.random.PRNGKey(3), 16, 2)
+    agent = FleetQLearning(scen, FleetConfig(cells=16, users=2), seed=0)
+    agent.step()
+    other = mixed_table5_fleet(jax.random.PRNGKey(4), 32, 2)
+    with pytest.raises(ValueError, match="FleetDQN"):
+        FleetOrchestrator(agent).route(scen=other)
