@@ -1,0 +1,157 @@
+"""Multi-edge-cell topology (ISSUE-3 acceptance): throughput of the
+topology-aware fleet env step vs the isolated-cell path across
+``(cells, edges)`` shapes, and expected reward of topology-aware vs
+topology-blind routing under a hot-edge scenario.
+
+Blind routing is exactly what PR 1/2 shipped: each cell picks its
+isolated brute-force optimum as if it owned a private edge and cloud.
+Aware routing is the coupled ``topology_bruteforce`` best-response
+oracle. Both are evaluated under the SAME shared contention, so the gap
+is purely the value of seeing neighbor pressure.
+
+Emits:
+  topology_env_cells{c}_edges{e},<us/env-step>,steps_per_s=...
+  topology_env_overhead,<ratio>,topology/isolated env-step time ...
+  topology_hot_edge_blind_reward,<reward>,isolated-optimal decisions ...
+  topology_hot_edge_aware_reward,<reward>,best-response decisions ...
+  topology_hot_edge_uplift,<delta>,aware - blind expected reward ...
+  topology_oracle_rounds,<n>,best-response sweeps to the fixed point
+
+``--tiny`` (CLI) shrinks every budget to a few seconds of work — the CI
+smoke mode that keeps this script from rotting.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FAST, Timer, emit, save_json
+from repro.core.spaces import SpaceSpec
+from repro.fleet import (FleetConfig, dynamics, fleet_bruteforce,
+                         fleet_topology_expected_response,
+                         hot_edge_topology, init_fleet, make_fleet_env_step,
+                         mixed_table5_fleet, topology_bruteforce,
+                         with_topology)
+
+USERS = 3
+THRESHOLD = 89.0          # forces offloading, so shared contention binds
+
+
+def bench_env(host_steps: int, cells: int, n_edges, chunk: int = 50):
+    """env-steps/sec of the jitted fleet env step (scan of ``chunk``
+    steps per host call), isolated (``n_edges=None``) or shared."""
+    cfg = FleetConfig(cells=cells, users=USERS, n_edges=n_edges,
+                      assignment="skewed", cloud_servers=4.0 * cells
+                      if n_edges else float("inf"))
+    scen = init_fleet(jax.random.PRNGKey(0), cfg)
+    env_step = make_fleet_env_step(cfg)
+
+    def run_chunk(key, scen, actions):          # actions: (chunk, cells, N)
+        def body(carry, a):
+            key, scen = carry
+            key, k = jax.random.split(key)
+            scen2, _, ms, _, _ = env_step(k, scen, a)
+            return (key, scen2), ms.mean()
+        (key, scen), ms = jax.lax.scan(body, (key, scen), actions)
+        return key, scen, ms
+
+    run_chunk = jax.jit(run_chunk)
+    rng = np.random.default_rng(1)
+    actions = jnp.asarray(rng.integers(0, 10, (chunk, cells, USERS)),
+                          jnp.int32)
+    key = jax.random.PRNGKey(2)
+    key, scen, _ = run_chunk(key, scen, actions)     # compile
+    jax.block_until_ready(scen.end_b)
+    n_chunks = max(1, host_steps // chunk)
+    with Timer() as t:
+        for _ in range(n_chunks):
+            key, scen, ms = run_chunk(key, scen, actions)
+        jax.block_until_ready(ms)
+    return n_chunks * chunk * cells / t.seconds
+
+
+def bench_hot_edge(cells: int, n_edges: int, users: int = 2,
+                   hot_fraction: float = 0.6, cloud_servers: float = 8.0):
+    """Expected reward of aware vs blind routing when ``hot_fraction``
+    of the cells share one edge and the cloud queues fleet-wide."""
+    scen = mixed_table5_fleet(jax.random.PRNGKey(0), cells, users)
+    topo = hot_edge_topology(cells, n_edges, hot_fraction=hot_fraction,
+                             cloud_servers=cloud_servers)
+    scen_t = with_topology(scen, topo)
+    spec = SpaceSpec(users)
+    pu = jnp.asarray(spec.decode_actions_batch(spec.all_actions()))
+    # blind: per-cell isolated optimum, then judged under shared load
+    _, blind_idx = fleet_bruteforce(scen, pu, THRESHOLD)
+    b_ms, b_acc = fleet_topology_expected_response(
+        pu[blind_idx], scen.end_b, scen.edge_b, topo, scen.member)
+    r_blind = float(dynamics.reward(b_ms, b_acc, THRESHOLD, xp=jnp).mean())
+    # aware: coupled best-response oracle
+    a_ms, a_idx, converged, rounds = topology_bruteforce(scen_t, pu,
+                                                         THRESHOLD)
+    _, a_acc = fleet_topology_expected_response(
+        pu[a_idx], scen.end_b, scen.edge_b, topo, scen.member)
+    r_aware = float(dynamics.reward(a_ms, a_acc, THRESHOLD, xp=jnp).mean())
+    emit("topology_hot_edge_blind_reward", r_blind,
+         f"isolated-optimal decisions under a {hot_fraction:.0%}-hot "
+         f"edge ({cells} cells, {n_edges} edges)")
+    emit("topology_hot_edge_aware_reward", r_aware,
+         f"best-response decisions, converged={converged} "
+         f"(target > blind)")
+    emit("topology_hot_edge_uplift", r_aware - r_blind,
+         "aware - blind expected reward (rewards are negative; > 0 "
+         "means routing around the hot edge pays)")
+    emit("topology_oracle_rounds", rounds,
+         "best-response sweeps to the fixed point")
+    return r_blind, r_aware, converged, rounds
+
+
+def main(tiny: bool = False):
+    if tiny:
+        shapes, steps, chunk = [(16, 4)], 60, 20
+        hot_cells, hot_edges = 16, 4
+    elif FAST:
+        shapes, steps, chunk = [(256, 16), (1024, 32)], 300, 50
+        hot_cells, hot_edges = 48, 4
+    else:
+        shapes, steps, chunk = [(256, 16), (1024, 32), (4096, 64)], 1000, 50
+        hot_cells, hot_edges = 64, 4
+
+    env_sps = {}
+    overhead = None
+    for cells, n_edges in shapes:
+        iso = bench_env(steps, cells, None, chunk)
+        topo = bench_env(steps, cells, n_edges, chunk)
+        env_sps[f"{cells}x{n_edges}"] = topo
+        overhead = iso / topo
+        emit(f"topology_env_cells{cells}_edges{n_edges}", 1e6 / topo,
+             f"steps_per_s={topo:.0f} (isolated path {iso:.0f}/s)")
+    emit("topology_env_overhead", overhead,
+         "isolated/topology env-step throughput at the largest shape "
+         "(segment-sum + queue cost; ~1 means the aggregation is free)")
+
+    r_blind, r_aware, converged, rounds = bench_hot_edge(hot_cells,
+                                                         hot_edges)
+    metrics = {
+        "users": USERS,
+        "topology_env_steps_per_s": env_sps,
+        "topology_env_overhead_x": overhead,
+        "hot_edge_blind_reward": r_blind,
+        "hot_edge_aware_reward": r_aware,
+        "hot_edge_reward_uplift": r_aware - r_blind,
+        "oracle_converged": bool(converged),
+        "oracle_rounds": int(rounds),
+    }
+    save_json("topology", metrics)
+    return metrics
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale budgets (CI smoke)")
+    main(tiny=ap.parse_args().tiny)

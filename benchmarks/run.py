@@ -18,7 +18,8 @@ from benchmarks import (bench_adaptation, bench_fig1_motivation,
                         bench_fleet_dqn, bench_fleet_throughput,
                         bench_kernels, bench_overhead,
                         bench_table8_decisions, bench_table9_constraints,
-                        bench_table10_sota, bench_table11_convergence)
+                        bench_table10_sota, bench_table11_convergence,
+                        bench_topology)
 from benchmarks.common import save_json
 
 SUITES = {
@@ -34,10 +35,11 @@ SUITES = {
     "adaptation": bench_adaptation,   # beyond-paper: mid-run network shift
     "fleet": bench_fleet_throughput,  # beyond-paper: vectorized fleet sim
     "fleet_dqn": bench_fleet_dqn,     # beyond-paper: shared-policy fleet DQN
+    "topology": bench_topology,       # beyond-paper: shared edges + cloud q
 }
 
 #: suites whose main() returns the headline dict folded into BENCH_fleet.json
-FLEET_SUITES = ("fleet", "fleet_dqn")
+FLEET_SUITES = ("fleet", "fleet_dqn", "topology")
 
 
 def main() -> None:
@@ -68,6 +70,7 @@ def main() -> None:
     if args.json:
         tp = fleet_metrics.get("fleet", {})
         dqn = fleet_metrics.get("fleet_dqn", {})
+        topo = fleet_metrics.get("topology", {})
         save_json("BENCH_fleet", {
             "env_steps_per_s": tp.get("fleet_env_steps_per_s"),
             "rl_steps_per_s": tp.get("fleet_rl_steps_per_s"),
@@ -75,6 +78,8 @@ def main() -> None:
             "converged_cells_per_s": tp.get("train_converged_cells_per_s"),
             "dqn_holdout_reward_ratio": dqn.get("holdout_reward_ratio"),
             "dqn_step_flatness": dqn.get("step_flatness"),
+            "topology_env_overhead_x": topo.get("topology_env_overhead_x"),
+            "topology_hot_edge_uplift": topo.get("hot_edge_reward_uplift"),
             "suites": fleet_metrics,
         })
         print("# wrote results/BENCH_fleet.json", flush=True)

@@ -20,12 +20,19 @@ from repro.fleet.dynamics import (accuracies, cell_response_times,
 
 _SCENARIOS = ("FleetConfig", "FleetScenario", "diurnal_rate",
               "heterogeneous_sizes", "init_fleet", "init_links",
-              "mixed_table5_fleet", "poisson_active", "step_churn",
-              "step_fleet", "step_links", "table5_fleet")
+              "make_topology", "mixed_table5_fleet", "poisson_active",
+              "step_churn", "step_fleet", "step_links", "table5_fleet",
+              "with_topology")
 _POPULATION = ("FleetOrchestrator", "FleetQConfig", "FleetQLearning",
                "FleetTrainResult", "default_actions", "fleet_bruteforce",
-               "make_fleet_env_step", "simulate_responses",
+               "make_fleet_env_step", "nominal_expected_response",
+               "simulate_responses", "topology_bruteforce",
                "train_against_oracle")
+_TOPOLOGY = ("Topology", "cloud_load_multiplier", "edge_capacities",
+             "edge_utilization", "fleet_topology_expected_response",
+             "hot_edge_topology", "identity_topology", "random_topology",
+             "shared_contention", "skewed_topology", "step_edge_failures",
+             "topology_expected_response", "topology_response_times")
 _REPLAY = ("FleetReplay", "replay_init", "replay_push", "replay_sample",
            "replay_size")
 _POLICY = ("FleetDQN", "FleetDQNConfig", "HoldoutEval",
@@ -35,7 +42,7 @@ __all__ = [
     "dynamics", "accuracies", "cell_response_times", "expected_response",
     "feasible", "fleet_actions_expected_response",
     "fleet_expected_response", "response_times", "reward", "t_comp_device",
-    *_SCENARIOS, *_POPULATION, *_REPLAY, *_POLICY,
+    *_SCENARIOS, *_POPULATION, *_REPLAY, *_POLICY, *_TOPOLOGY,
 ]
 
 
@@ -49,8 +56,11 @@ def __getattr__(name):
         mod = importlib.import_module("repro.fleet.replay")
     elif name in _POLICY or name == "policy":
         mod = importlib.import_module("repro.fleet.policy")
+    elif name in _TOPOLOGY or name == "topology":
+        mod = importlib.import_module("repro.fleet.topology")
     else:
         raise AttributeError(
             f"module 'repro.fleet' has no attribute {name!r}")
-    return (mod if name in ("scenarios", "population", "replay", "policy")
+    return (mod if name in ("scenarios", "population", "replay", "policy",
+                            "topology")
             else getattr(mod, name))

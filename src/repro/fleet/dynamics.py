@@ -104,15 +104,21 @@ def t_comp_device(model_id, xp=np):
 
 
 def response_times(per_user, end_b, edge_b, *, counts=None, active=None,
-                   xp=np):
+                   cloud_mult=None, xp=np):
     """Per-user response time (ms), noise-free.
 
     per_user : (..., N) int  per-user action ids (0..7 local, 8 edge, 9 cloud)
     end_b    : (..., N) int  per-end-node link state (0 Regular, 1 Weak)
     edge_b   : (...,)   int  edge backhaul link state
-    counts   : optional (n_edge, n_cloud) override of contention counts
+    counts   : optional (n_edge, n_cloud) override of contention counts —
+               the seam ``fleet.topology`` feeds shared (cross-cell,
+               capacity-scaled) contention through; may be fractional
     active   : optional (..., N) bool; inactive users produce 0 ms and do
                not contribute to edge/cloud contention
+    cloud_mult : optional queueing multiplier on the cloud-side terms
+               (the edge->cloud hop and cloud compute, not the device
+               upload), broadcastable against ``(..., N)`` — see
+               ``fleet.topology.cloud_load_multiplier``
 
     Broadcasts over leading batch dims; ``xp`` selects numpy vs jax.numpy.
     """
@@ -152,8 +158,12 @@ def response_times(per_user, end_b, edge_b, *, counts=None, active=None,
     cpu_c = xp.maximum(1.0, n_c / TIER_CORES["C"])
     link_c = xp.maximum(1.0, n_c / CLOUD_LINK_CAP)
     mem_c = xp.where(n_c > CLOUD_MEM_BUSY_AT, MEM_BUSY_PENALTY, 1.0)
-    t_c = (up_e * link_c + xp.asarray(T_HOP_CLOUD_MS)[edge_b][..., None]
-           * link_c + comp_c * cpu_c * mem_c)
+    hop_c = xp.asarray(T_HOP_CLOUD_MS)[edge_b][..., None] * link_c
+    comp_term = comp_c * cpu_c * mem_c
+    if cloud_mult is not None:
+        hop_c = hop_c * cloud_mult
+        comp_term = comp_term * cloud_mult
+    t_c = up_e * link_c + hop_c + comp_term
     t = t + xp.where(at_cloud, t_c, 0.0)
     if active is not None:
         t = xp.where(active, t, 0.0)
@@ -166,15 +176,19 @@ def accuracies(per_user, xp=np):
     return xp.asarray(TOP5)[xp.where(per_user < A_EDGE, per_user, 0)]
 
 
-def expected_response(per_user, end_b, edge_b, *, active=None, xp=np):
+def expected_response(per_user, end_b, edge_b, *, active=None, counts=None,
+                      cloud_mult=None, xp=np):
     """(mean response ms, mean top-5 accuracy) over the (last) user axis.
 
     With an ``active`` mask, means are over active users only. A cell
     with zero active users served nothing: it reports 0 ms and a
     vacuously-satisfying 100% accuracy, so it can never earn the
-    constraint-violation reward floor for being idle.
+    constraint-violation reward floor for being idle. ``counts`` /
+    ``cloud_mult`` pass through to ``response_times`` (the
+    ``fleet.topology`` shared-contention seam).
     """
-    t = response_times(per_user, end_b, edge_b, active=active, xp=xp)
+    t = response_times(per_user, end_b, edge_b, active=active, counts=counts,
+                       cloud_mult=cloud_mult, xp=xp)
     acc = accuracies(per_user, xp=xp)
     if active is None:
         return t.mean(-1), acc.mean(-1)

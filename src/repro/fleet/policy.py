@@ -75,8 +75,9 @@ from repro.core.spaces import (N_PER_USER_ACTIONS, SpaceSpec,
                                allowed_per_user)
 from repro.fleet import dynamics
 from repro.fleet.population import (FleetTrainResult, default_actions,
-                                    fleet_bruteforce, simulate_responses,
-                                    train_against_oracle)
+                                    fleet_bruteforce,
+                                    nominal_expected_response,
+                                    simulate_responses, train_against_oracle)
 from repro.fleet.replay import replay_init, replay_push, replay_sample
 from repro.fleet.scenarios import FleetConfig, FleetScenario, step_fleet
 from repro.training.optimizer import (apply_updates, constant_lr_adamw,
@@ -85,8 +86,10 @@ from repro.training.optimizer import (apply_updates, constant_lr_adamw,
 
 def state_dim(users: int) -> int:
     """Feature width of ``encode_fleet_state``: 3 per-user blocks
-    (active, member, end link) + edge link + 2 counts + cell size."""
-    return 3 * users + 4
+    (active, member, end link) + edge link + 2 counts + cell size + 3
+    topology features (own-edge shared load, own-edge capacity, fleet
+    cloud utilization)."""
+    return 3 * users + 7
 
 
 def encode_fleet_state(counts, scen: FleetScenario) -> jnp.ndarray:
@@ -99,6 +102,12 @@ def encode_fleet_state(counts, scen: FleetScenario) -> jnp.ndarray:
       [3N]     edge backhaul link state
       [3N+1,2] previous step's (edge, cloud) job counts / N
       [3N+3]   cell size / N
+      [3N+4]   own edge's SHARED load: last-step edge jobs summed over
+               every cell on this cell's edge, / (N * capacity) — the
+               neighbor-pressure signal (== [3N+1] for isolated fleets)
+      [3N+5]   own edge's capacity tier (1.0 for isolated fleets)
+      [3N+6]   fleet-wide cloud utilization, last-step cloud jobs /
+               cloud_servers (0.0 for isolated / unbounded clouds)
 
     The loss slices the request bits back out of stored states to mask
     per-user terms, so the layout above is load-bearing — keep the
@@ -106,20 +115,38 @@ def encode_fleet_state(counts, scen: FleetScenario) -> jnp.ndarray:
     """
     users = scen.users
     inv = 1.0 / users
+    counts_f = counts.astype(jnp.float32)
+    if scen.topo is None:
+        edge_load = counts_f[:, :1] * inv          # own jobs == shared jobs
+        cap = jnp.ones((scen.cells, 1), jnp.float32)
+        util = jnp.zeros((scen.cells, 1), jnp.float32)
+    else:
+        topo = scen.topo
+        tot = jax.ops.segment_sum(counts[:, 0], topo.cell_edge,
+                                  num_segments=topo.n_edges)
+        cap_cell = topo.edge_capacity[topo.cell_edge]
+        edge_load = (tot[topo.cell_edge] / cap_cell)[:, None] * inv
+        cap = cap_cell[:, None]
+        util = jnp.broadcast_to(counts_f[:, 1].sum() / topo.cloud_servers,
+                                (scen.cells, 1))
     return jnp.concatenate([
         scen.active.astype(jnp.float32),
         scen.member.astype(jnp.float32),
         scen.end_b.astype(jnp.float32),
         scen.edge_b[:, None].astype(jnp.float32),
-        counts.astype(jnp.float32) * inv,
+        counts_f * inv,
         scen.member.sum(-1, keepdims=True).astype(jnp.float32) * inv,
+        edge_load.astype(jnp.float32),
+        cap,
+        util,
     ], axis=-1)
 
 
 #: per-user input width of the shared encoder: [own request bit, own
 #: membership, own end-link, edge link, active fraction, edge jobs /N,
-#: cloud jobs /N, weak-link fraction among active users]
-N_USER_FEATURES = 8
+#: cloud jobs /N, weak-link fraction among active users, own-edge shared
+#: load, own-edge capacity, fleet cloud utilization]
+N_USER_FEATURES = 11
 
 
 def make_shared_per_user_q(users: int, allowed):
@@ -136,13 +163,14 @@ def make_shared_per_user_q(users: int, allowed):
         n = users
         act, mem, end = s[:, :n], s[:, n:2 * n], s[:, 2 * n:3 * n]
         cell = s[:, 3 * n:3 * n + 3]               # edge_b, n_e/N, n_c/N
+        topo_f = s[:, 3 * n + 4:3 * n + 7]         # shared load, cap, util
         n_act = act.sum(-1, keepdims=True)
         weak = (end * act).sum(-1, keepdims=True) / jnp.maximum(n_act, 1.0)
-        agg = jnp.concatenate([cell[:, :1], n_act / n, cell[:, 1:], weak],
-                              -1)                  # (B, 5)
+        agg = jnp.concatenate([cell[:, :1], n_act / n, cell[:, 1:], weak,
+                               topo_f], -1)        # (B, 8)
         f = jnp.concatenate(
             [act[..., None], mem[..., None], end[..., None],
-             jnp.broadcast_to(agg[:, None, :], (s.shape[0], n, 5))], -1)
+             jnp.broadcast_to(agg[:, None, :], (s.shape[0], n, 8))], -1)
         q = mlp_apply(params, f.reshape(-1, N_USER_FEATURES))
         return jnp.where(allowed[None], q.reshape(s.shape[0], n, -1), -1e30)
 
@@ -468,8 +496,7 @@ class FleetDQN:
         pass a held-out ``scen`` to score cross-cell generalization."""
         eval_scen = scen if scen is not None else self.scen
         per_user = self.greedy_decisions(scen=scen)
-        ms, acc = dynamics.fleet_expected_response(
-            per_user, eval_scen.end_b, eval_scen.edge_b, eval_scen.member)
+        ms, acc = nominal_expected_response(eval_scen, per_user)
         return np.asarray(ms), np.asarray(acc)
 
     def train(self, max_steps: int, check_every: int = 200,

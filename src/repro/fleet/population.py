@@ -35,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.spaces import SpaceSpec, restricted_actions
-from repro.fleet import dynamics
+from repro.fleet import dynamics, topology
 from repro.fleet.scenarios import FleetConfig, FleetScenario, step_fleet
 
 
@@ -43,9 +43,20 @@ def simulate_responses(key, scen: FleetScenario, per_user, noise: float):
     """Noisy fleet-wide response simulation: (cells,) mean ms and mean
     accuracy over each cell's active users, plus next-step job counts.
     The jittable analogue of ``EndEdgeCloudEnv.response_times`` +
-    ``accuracies`` for every cell at once."""
-    mean_ms, acc = dynamics.expected_response(
-        per_user, scen.end_b, scen.edge_b, active=scen.active, xp=jnp)
+    ``accuracies`` for every cell at once.
+
+    With an attached ``scen.topo`` the responses couple across cells
+    (shared edges, cloud queueing) via ``topology_expected_response``;
+    the returned ``counts`` stay per-cell own-job counts either way (the
+    observation both agents index/encode — aggregation over the
+    assignment happens inside the dynamics each step)."""
+    if scen.topo is None:
+        mean_ms, acc = dynamics.expected_response(
+            per_user, scen.end_b, scen.edge_b, active=scen.active, xp=jnp)
+    else:
+        mean_ms, acc = topology.topology_expected_response(
+            per_user, scen.end_b, scen.edge_b, scen.topo,
+            active=scen.active, xp=jnp)
     n_act = jnp.maximum(scen.active.sum(-1), 1)
     if noise:
         # one per-cell draw on the mean instead of the scalar env's N
@@ -60,6 +71,19 @@ def simulate_responses(key, scen: FleetScenario, per_user, noise: float):
          ((per_user == dynamics.A_CLOUD) & scen.active).sum(-1)],
         axis=-1).astype(jnp.int32)
     return mean_ms, acc, counts
+
+
+def nominal_expected_response(scen: FleetScenario, per_user):
+    """Noise-free (cells,) mean ms / mean accuracy of ``per_user`` under
+    nominal load (all member users requesting), shared- or
+    isolated-contention depending on ``scen.topo`` — the ONE evaluation
+    behind both agents' ``greedy_expected``, the oracles, and the
+    benchmarks, so the two contention regimes can't drift apart."""
+    if scen.topo is None:
+        return dynamics.fleet_expected_response(
+            per_user, scen.end_b, scen.edge_b, scen.member)
+    return topology.fleet_topology_expected_response(
+        per_user, scen.end_b, scen.edge_b, scen.topo, scen.member)
 
 
 def make_fleet_env_step(fleet_cfg: FleetConfig, threshold: float = 0.0,
@@ -286,8 +310,7 @@ class FleetQLearning:
             counts = (self.counts if scen is None else
                       jnp.zeros((eval_scen.cells, 2), jnp.int32))
         per_user = self.policy_decisions(counts, eval_scen)[0]
-        ms, acc = dynamics.fleet_expected_response(
-            per_user, eval_scen.end_b, eval_scen.edge_b, eval_scen.member)
+        ms, acc = nominal_expected_response(eval_scen, per_user)
         return np.asarray(ms), np.asarray(acc)
 
 
@@ -306,7 +329,8 @@ def train_against_oracle(agent, max_steps: int, check_every: int = 200,
     check, and "converged" means tracking the current optimum."""
     fc = agent.fleet_cfg
     threshold = agent.accuracy_threshold
-    dynamic = bool(fc.p_r2w or fc.p_w2r or fc.p_join or fc.p_leave)
+    dynamic = bool(fc.p_r2w or fc.p_w2r or fc.p_join or fc.p_leave
+                   or fc.p_edge_fail)
     opt_ms = None                        # dynamic: computed per check instead
     if not dynamic:
         opt_ms = np.asarray(fleet_bruteforce(
@@ -367,12 +391,29 @@ class FleetTrainResult:
 # ---------------------------------------------------------------------------
 def fleet_bruteforce(scen: FleetScenario, pu_table: jnp.ndarray,
                      threshold: float = 0.0, chunk: int = 4096):
-    """Per-cell brute-force optimum over the candidate action table.
+    """Per-cell optimum over the candidate action table under nominal
+    load (all member users requesting). Returns ((cells,) best ms,
+    (cells,) best index).
 
-    Evaluates all K candidates for all cells (chunked over K to bound the
-    ``cells x chunk x N`` intermediate) under nominal load (all member
-    users requesting). Returns ((cells,) best ms, (cells,) best index).
+    Isolated fleets get the exact chunked brute force; with an attached
+    ``scen.topo`` the per-cell argmax is no longer exact (cells couple
+    through shared edges and the cloud queue), so this dispatches to the
+    coordinate-descent ``topology_bruteforce`` — same return contract,
+    so ``train_against_oracle`` / ``holdout_reward_ratio`` work
+    unchanged on either fleet kind.
     """
+    if scen.topo is not None:
+        ms, idx, _, _ = topology_bruteforce(scen, pu_table, threshold,
+                                            chunk=chunk)
+        return ms, idx
+    return _isolated_bruteforce(scen, pu_table, threshold, chunk)
+
+
+def _isolated_bruteforce(scen: FleetScenario, pu_table: jnp.ndarray,
+                         threshold: float = 0.0, chunk: int = 4096):
+    """The exact per-cell brute force for uncoupled cells: evaluates all
+    K candidates for all cells, chunked over K to bound the
+    ``cells x chunk x N`` intermediate."""
     member = scen.member
     best_ms = jnp.full((scen.cells,), jnp.inf)
     best_idx = jnp.zeros((scen.cells,), jnp.int32)
@@ -393,6 +434,126 @@ def fleet_bruteforce(scen: FleetScenario, pu_table: jnp.ndarray,
     return best_ms, best_idx
 
 
+#: minimum per-cell improvement (ms) for a best-response switch — a
+#: strict-improvement margin so equal-cost candidates can't cycle
+BEST_RESPONSE_TOL = 1e-6
+
+
+@jax.jit
+def _best_response_round(idx, pu_table, end_b, edge_b, member, feas,
+                         cand_e, cand_c, cell_edge, edge_capacity,
+                         cloud_servers):
+    """One Gauss-Seidel sweep: each cell in turn picks its best feasible
+    candidate given every OTHER cell's current decision, with running
+    per-edge / cloud totals updated in place (O(1) per cell instead of a
+    fleet-wide re-aggregation). ``feas`` / ``cand_e`` / ``cand_c`` are
+    the (cells, K) round-invariant tables precomputed by
+    ``topology_bruteforce`` — recomputing them here would redo a
+    cells x K x N reduce on every sweep."""
+    n_edges = edge_capacity.shape[0]
+    cells = idx.shape[0]
+    rows = jnp.arange(cells)
+    e_cnt = cand_e[rows, idx]
+    c_cnt = cand_c[rows, idx]
+    edge_tot = jax.ops.segment_sum(e_cnt, cell_edge, num_segments=n_edges)
+    cloud_tot = c_cnt.sum()
+
+    def body(i, carry):
+        idx, e_cnt, c_cnt, edge_tot, cloud_tot = carry
+        e_i = cell_edge[i]
+        n_e_k = (edge_tot[e_i] - e_cnt[i] + cand_e[i]) / edge_capacity[e_i]
+        tot_c_k = cloud_tot - c_cnt[i] + cand_c[i]
+        mult_k = topology.cloud_load_multiplier(tot_c_k, cloud_servers,
+                                                xp=jnp)
+        ms_k, _ = dynamics.expected_response(
+            pu_table, end_b[i][None, :], edge_b[i],
+            active=member[i][None, :], counts=(n_e_k, cand_c[i]),
+            cloud_mult=mult_k[:, None], xp=jnp)              # (K,)
+        score = jnp.where(feas[i], ms_k, jnp.inf)
+        j = score.argmin()
+        cur = idx[i]
+        new = jnp.where(score[j] < score[cur] - BEST_RESPONSE_TOL, j,
+                        cur).astype(idx.dtype)
+        edge_tot = edge_tot.at[e_i].add(cand_e[i, new] - e_cnt[i])
+        cloud_tot = cloud_tot + cand_c[i, new] - c_cnt[i]
+        return (idx.at[i].set(new), e_cnt.at[i].set(cand_e[i, new]),
+                c_cnt.at[i].set(cand_c[i, new]), edge_tot, cloud_tot)
+
+    idx, _, _, _, _ = jax.lax.fori_loop(
+        0, cells, body, (idx, e_cnt, c_cnt, edge_tot, cloud_tot))
+    return idx
+
+
+def topology_bruteforce(scen: FleetScenario, pu_table: jnp.ndarray,
+                        threshold: float = 0.0, max_rounds: int = 50,
+                        chunk: int = 4096):
+    """Coupled-fleet oracle: coordinate descent by best response.
+
+    Once cells share an edge or queue at the cloud, the per-cell argmax
+    of ``_isolated_bruteforce`` is no longer exact — one cell's best
+    decision depends on its neighbors'. Starting from the isolated
+    optimum, this sweeps the fleet in Gauss-Seidel rounds (each cell
+    best-responds to every other cell's current decision; feasibility
+    depends only on a cell's own action, so the filter is exact) until a
+    full round changes nothing — a pure equilibrium of the resulting
+    congestion game, the standard orchestration target for this
+    coupling — or ``max_rounds`` sweeps.
+
+    Returns ``((cells,) ms, (cells,) index, converged, rounds)`` where
+    ``ms`` is each cell's nominal-load expected response under shared
+    contention and ``converged`` reports the fixed-point check (False
+    means a best-response cycle was cut off at ``max_rounds`` and the
+    result is the last sweep, still feasible but possibly unstable).
+    Without an attached topology this is exactly the isolated oracle
+    (converged in 0 rounds).
+    """
+    if scen.topo is None:
+        ms, idx = _isolated_bruteforce(scen, pu_table, threshold, chunk)
+        return ms, idx, True, 0
+    # isolated optimum as the starting point (also raises on an
+    # infeasible threshold — feasibility is contention-independent)
+    _, idx = _isolated_bruteforce(scen, pu_table, threshold, chunk)
+    # round-invariant (cells, K) tables, built chunked over K so the
+    # cells x chunk x N intermediate stays as bounded as the isolated
+    # oracle's: the feasibility filter and the per-candidate edge/cloud
+    # offload counts under nominal (member) load
+    member = np.asarray(scen.member)
+    cells_n, K = member.shape[0], pu_table.shape[0]
+    nm = np.maximum(member.sum(-1), 1)[:, None]
+    any_m = member.any(-1)[:, None]
+    pu_np = np.asarray(pu_table)
+    feas_np = np.empty((cells_n, K), bool)
+    cand_e_np = np.empty((cells_n, K), np.int32)
+    cand_c_np = np.empty((cells_n, K), np.int32)
+    for lo in range(0, K, chunk):
+        pu = pu_np[lo:lo + chunk]                            # (k, N)
+        acc = dynamics.accuracies(pu)
+        macc = np.where(any_m,
+                        (acc[None] * member[:, None, :]).sum(-1) / nm,
+                        100.0)
+        feas_np[:, lo:lo + chunk] = dynamics.feasible(macc, threshold)
+        cand_e_np[:, lo:lo + chunk] = ((pu[None] == dynamics.A_EDGE)
+                                       & member[:, None, :]).sum(-1)
+        cand_c_np[:, lo:lo + chunk] = ((pu[None] == dynamics.A_CLOUD)
+                                       & member[:, None, :]).sum(-1)
+    feas = jnp.asarray(feas_np)
+    cand_e, cand_c = jnp.asarray(cand_e_np), jnp.asarray(cand_c_np)
+    topo = scen.topo
+    converged, rounds = False, 0
+    for rounds in range(1, max_rounds + 1):
+        new_idx = _best_response_round(
+            idx, pu_table, scen.end_b, scen.edge_b, scen.member, feas,
+            cand_e, cand_c, topo.cell_edge, topo.edge_capacity,
+            topo.cloud_servers)
+        if bool((new_idx == idx).all()):
+            converged = True
+            break
+        idx = new_idx
+    ms, _ = topology.fleet_topology_expected_response(
+        pu_table[idx], scen.end_b, scen.edge_b, topo, scen.member)
+    return ms, idx, converged, rounds
+
+
 class FleetOrchestrator:
     """Runtime policy head for a fleet: routes the decisions of every
     cell from ONE vectorized greedy pass (the fleet analogue of
@@ -404,17 +565,29 @@ class FleetOrchestrator:
         self.agent = agent
 
     def route(self, scen: Optional[FleetScenario] = None,
-              counts: Optional[jnp.ndarray] = None):
+              counts: Optional[jnp.ndarray] = None,
+              with_edge_util: bool = False):
         """(cells, N) per-user tier/model decisions + (cells,) action ids
         for the whole fleet, in one jitted greedy pass. A held-out
         ``scen`` without ``counts`` is routed cold (zero job counts);
         routing a fleet the agent never trained on needs a policy that
         transfers — ``fleet.policy.FleetDQN`` (the tabular agent raises
-        on a cell-count mismatch)."""
+        on a cell-count mismatch).
+
+        ``with_edge_util=True`` appends the (n_edges,) per-edge
+        utilization this decision induces over the currently active
+        users (jobs per unit of edge capacity; an isolated fleet reports
+        per-cell loads via the 1:1 identity topology)."""
         if scen is None:
             scen = self.agent.scen
             if counts is None:
                 counts = self.agent.counts
         elif counts is None:
             counts = jnp.zeros((scen.cells, 2), jnp.int32)
-        return self.agent.policy_decisions(counts, scen)
+        dec, ids = self.agent.policy_decisions(counts, scen)
+        if not with_edge_util:
+            return dec, ids
+        topo = (scen.topo if scen.topo is not None
+                else topology.identity_topology(scen.cells))
+        util = topology.edge_utilization(dec, topo, active=scen.active)
+        return dec, ids, util

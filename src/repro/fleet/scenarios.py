@@ -17,6 +17,11 @@ pure, seedable, jit-compatible generators over ``(cells, users)`` arrays:
 * **Heterogeneous cell sizes** — per-cell user counts drawn in
   ``[min_users, max_users]``, realized as a padded active mask
   (`heterogeneous_sizes`).
+* **Multi-edge-cell topologies** — cells share edge servers and queue
+  at a common cloud (``fleet.topology``): `FleetConfig.n_edges` turns
+  on a generated assignment (random or Zipf-skewed, with capacity
+  tiers and an M/M/c cloud queue), and `p_edge_fail` adds edge-failure
+  rerouting as a per-step scenario event.
 
 `FleetScenario` composes all of the above behind `init_fleet` /
 `step_fleet`; `table5_fleet` replicates any paper scenario across a
@@ -25,13 +30,16 @@ fleet for parity testing against the scalar environment.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.fleet.dynamics import EXPERIMENTS
+from repro.fleet.topology import (Topology, hot_edge_topology,
+                                  random_topology, skewed_topology,
+                                  step_edge_failures)
 
 # ---------------------------------------------------------------------------
 # link-state dynamics (Markov-modulated Regular/Weak, generalizes Table 5)
@@ -119,6 +127,14 @@ class FleetConfig:
     p_leave: float = 0.0
     min_users: int = 5
     max_users: int = 5
+    # topology (None -> isolated cells, the paper's 1-cell-per-edge view)
+    n_edges: Optional[int] = None
+    assignment: str = "random"            # 'random' | 'skewed' | 'hot'
+    skew: float = 1.5                     # Zipf exponent for 'skewed'
+    hot_fraction: float = 0.5             # edge-0 share for 'hot'
+    capacity_tiers: Tuple[float, ...] = (1.0,)
+    cloud_servers: float = float("inf")   # M/M/c queue size; inf = off
+    p_edge_fail: float = 0.0              # per-step edge-failure prob.
 
 
 @jax.tree_util.register_pytree_node_class
@@ -131,16 +147,19 @@ class FleetScenario:
     member : (cells, users) bool    user belongs to the cell (churn/size)
     active : (cells, users) bool    member AND issued a request this step
     t      : ()             int32   step counter (drives diurnal curve)
+    topo   : Topology | None        shared edge/cloud infrastructure;
+                                    None = isolated cells (the paper)
     """
     end_b: jnp.ndarray
     edge_b: jnp.ndarray
     member: jnp.ndarray
     active: jnp.ndarray
     t: jnp.ndarray
+    topo: Optional[Topology] = None
 
     def tree_flatten(self):
-        return ((self.end_b, self.edge_b, self.member, self.active, self.t),
-                None)
+        return ((self.end_b, self.edge_b, self.member, self.active, self.t,
+                 self.topo), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -155,9 +174,43 @@ class FleetScenario:
         return self.end_b.shape[1]
 
 
+def make_topology(key, cfg: FleetConfig) -> Optional[Topology]:
+    """Generate the ``Topology`` a ``FleetConfig`` describes (None when
+    ``n_edges`` is unset — isolated cells)."""
+    if cfg.n_edges is None:
+        return None
+    kw = dict(capacity_tiers=tuple(cfg.capacity_tiers),
+              cloud_servers=cfg.cloud_servers)
+    if cfg.assignment == "random":
+        return random_topology(key, cfg.cells, cfg.n_edges, **kw)
+    if cfg.assignment == "skewed":
+        return skewed_topology(key, cfg.cells, cfg.n_edges, skew=cfg.skew,
+                               **kw)
+    if cfg.assignment == "hot":
+        return hot_edge_topology(cfg.cells, cfg.n_edges,
+                                 hot_fraction=cfg.hot_fraction, **kw)
+    raise ValueError(f"unknown assignment {cfg.assignment!r} "
+                     "(expected 'random', 'skewed', or 'hot')")
+
+
+def with_topology(s: FleetScenario, topo: Optional[Topology]) -> \
+        FleetScenario:
+    """A copy of ``s`` with ``topo`` attached (or detached with None) —
+    the bridge from the Table-5 builders to shared-infrastructure
+    fleets."""
+    return dataclasses.replace(s, topo=topo)
+
+
 def init_fleet(key, cfg: FleetConfig) -> FleetScenario:
     """Seedable initial fleet state for ``cfg``."""
-    k_end, k_edge, k_size, k_arr = jax.random.split(key, 4)
+    # extra keys only when configured, so pre-topology configs keep
+    # their exact random streams
+    if cfg.n_edges is not None:
+        k_end, k_edge, k_size, k_arr, k_topo = jax.random.split(key, 5)
+        topo = make_topology(k_topo, cfg)
+    else:
+        k_end, k_edge, k_size, k_arr = jax.random.split(key, 4)
+        topo = None
     end_b = init_links(k_end, (cfg.cells, cfg.users), cfg.p_weak0)
     edge_b = init_links(k_edge, (cfg.cells,), cfg.p_weak0)
     hi = min(cfg.max_users, cfg.users)
@@ -168,7 +221,7 @@ def init_fleet(key, cfg: FleetConfig) -> FleetScenario:
         _, member = heterogeneous_sizes(k_size, cfg.cells, hi,
                                         min_users=lo, width=cfg.users)
     active = member & _arrivals(k_arr, cfg, member.shape, jnp.int32(0))
-    return FleetScenario(end_b, edge_b, member, active, jnp.int32(0))
+    return FleetScenario(end_b, edge_b, member, active, jnp.int32(0), topo)
 
 
 def _arrivals(key, cfg: FleetConfig, shape, t):
@@ -183,8 +236,15 @@ def _arrivals(key, cfg: FleetConfig, shape, t):
 
 def step_fleet(key, s: FleetScenario, cfg: FleetConfig) -> FleetScenario:
     """Advance every cell's exogenous state by one step (pure; jit/scan
-    friendly — ``FleetScenario`` is a registered pytree)."""
-    k_end, k_edge, k_churn, k_arr = jax.random.split(key, 4)
+    friendly — ``FleetScenario`` is a registered pytree). With
+    ``cfg.p_edge_fail`` and an attached topology, each step may fail one
+    edge and reroute its cells (``topology.step_edge_failures``)."""
+    topo = s.topo
+    if cfg.p_edge_fail and s.topo is not None:
+        k_end, k_edge, k_churn, k_arr, k_fail = jax.random.split(key, 5)
+        topo = step_edge_failures(k_fail, topo, cfg.p_edge_fail)
+    else:
+        k_end, k_edge, k_churn, k_arr = jax.random.split(key, 4)
     end_b, edge_b = s.end_b, s.edge_b
     if cfg.p_r2w or cfg.p_w2r:
         end_b = step_links(k_end, end_b, cfg.p_r2w, cfg.p_w2r)
@@ -194,7 +254,7 @@ def step_fleet(key, s: FleetScenario, cfg: FleetConfig) -> FleetScenario:
         member = step_churn(k_churn, member, cfg.p_join, cfg.p_leave)
     t = s.t + 1
     active = member & _arrivals(k_arr, cfg, member.shape, t)
-    return FleetScenario(end_b, edge_b, member, active, t)
+    return FleetScenario(end_b, edge_b, member, active, t, topo)
 
 
 def table5_fleet(name: str, cells: int, users: int = 5) -> FleetScenario:

@@ -65,3 +65,68 @@ def test_edge_memory_penalty_consistent_across_paths():
     ms_scalar, _ = env.expected_response(a)
     ms_batch, _ = env.expected_response_batch(np.array([a]))
     assert abs(ms_scalar - float(ms_batch[0])) < 1e-9
+
+
+# ----------------------------------------------- counts-override seam -----
+# fleet.topology feeds shared (cross-cell) contention through the
+# ``counts`` kwarg of dynamics.response_times, so the seam itself gets
+# the same exhaustive treatment as the default path.
+
+@pytest.mark.parametrize("name", ["EXP-A", "EXP-D"])
+@pytest.mark.parametrize("n", [1, 2, 3])
+def test_counts_override_matches_internal_counts_exhaustively(n, name):
+    """Passing the internally computed (n_edge, n_cloud) through the
+    counts override must reproduce counts=None BIT-exactly for every
+    joint action — the identity that makes the 1:1 topology reduction
+    exact."""
+    from repro.fleet import dynamics
+    env = EndEdgeCloudEnv(n, EXPERIMENTS[name], noise=0)
+    end_b = np.asarray(env.scenario.end_b[:n])
+    for a in env.spec.all_actions():
+        pu = np.asarray(env.spec.decode_action(int(a)))
+        n_e = int((pu == 8).sum())
+        n_c = int((pu == 9).sum())
+        t0 = dynamics.response_times(pu, end_b, env.scenario.edge_b)
+        t1 = dynamics.response_times(pu, end_b, env.scenario.edge_b,
+                                     counts=(n_e, n_c))
+        np.testing.assert_array_equal(t0, t1)
+        # fractional counts (capacity-scaled loads) are accepted too
+        t2 = dynamics.response_times(pu, end_b, env.scenario.edge_b,
+                                     counts=(float(n_e), float(n_c)))
+        np.testing.assert_array_equal(t0, t2)
+
+
+def test_counts_override_inflates_only_offloaded_users():
+    """Extra background contention slows edge/cloud users and leaves
+    local users untouched (the cross-cell coupling direction)."""
+    from repro.fleet import dynamics
+    env = EndEdgeCloudEnv(3, EXPERIMENTS["EXP-A"], noise=0)
+    pu = np.array([0, 8, 9])
+    end_b = np.asarray(env.scenario.end_b[:3])
+    base = dynamics.response_times(pu, end_b, env.scenario.edge_b,
+                                   counts=(1, 1))
+    loaded = dynamics.response_times(pu, end_b, env.scenario.edge_b,
+                                     counts=(5, 6))
+    assert loaded[0] == base[0]                # local user unaffected
+    assert loaded[1] > base[1]                 # edge user slower
+    assert loaded[2] > base[2]                 # cloud user slower
+    # the scalar env exposes the same seam
+    t_env = env.response_times(pu, noisy=False, counts=(5, 6))
+    np.testing.assert_allclose(t_env, loaded)
+
+
+def test_cloud_mult_scales_only_cloud_side_terms():
+    """cloud_mult=1 is a bit-exact no-op; cloud_mult>1 inflates only the
+    cloud hop + compute (not the device upload, not edge/local users)."""
+    from repro.fleet import dynamics
+    env = EndEdgeCloudEnv(3, EXPERIMENTS["EXP-B"], noise=0)
+    pu = np.array([2, 8, 9])
+    end_b = np.asarray(env.scenario.end_b[:3])
+    base = dynamics.response_times(pu, end_b, env.scenario.edge_b)
+    noop = dynamics.response_times(pu, end_b, env.scenario.edge_b,
+                                   cloud_mult=1.0)
+    np.testing.assert_array_equal(base, noop)
+    slow = dynamics.response_times(pu, end_b, env.scenario.edge_b,
+                                   cloud_mult=2.0)
+    np.testing.assert_array_equal(slow[:2], base[:2])
+    assert base[2] < slow[2] < 2 * base[2]     # upload term not doubled

@@ -60,6 +60,45 @@ def test_contention_monotone(n, data):
     assert t_more[0] >= t_few[0] - 1e-9
 
 
+@given(st.integers(1, 5), st.data())
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_response_monotone_in_contention_counts(n, data):
+    """dynamics.response_times is monotonically non-decreasing in the
+    edge/cloud contention counts fed through the override seam (the
+    property fleet.topology's shared, capacity-scaled loads rely on:
+    more neighbors can never make anyone faster)."""
+    from repro.fleet import dynamics
+    env = EXPERIMENTS[data.draw(st.sampled_from(["EXP-A", "EXP-D"]))]
+    pu = np.asarray([data.draw(st.integers(0, N_PER_USER_ACTIONS - 1))
+                     for _ in range(n)])
+    end_b = np.asarray(env.end_b[:n])
+    n_e = data.draw(st.floats(0.0, 10.0))
+    n_c = data.draw(st.floats(0.0, 10.0))
+    d_e = data.draw(st.floats(0.0, 10.0))
+    d_c = data.draw(st.floats(0.0, 10.0))
+    t0 = dynamics.response_times(pu, end_b, env.edge_b,
+                                 counts=(n_e, n_c))
+    t1 = dynamics.response_times(pu, end_b, env.edge_b,
+                                 counts=(n_e + d_e, n_c + d_c))
+    assert (t1 >= t0 - 1e-9).all()
+
+
+@given(st.data())
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_device_compute_monotone_in_macs(data):
+    """t_comp_device is non-decreasing in a model's MACs within each
+    dtype family (the affine fit has positive slope, so a bigger model
+    can never run faster on the same hardware)."""
+    from repro.fleet import dynamics
+    fam = data.draw(st.sampled_from([[0, 1, 2, 3], [4, 5, 6, 7]]))
+    i = data.draw(st.sampled_from(fam))
+    j = data.draw(st.sampled_from(fam))
+    if dynamics.MACS[i] < dynamics.MACS[j]:
+        i, j = j, i                      # i is the bigger model
+    assert float(dynamics.t_comp_device(i)) >= \
+        float(dynamics.t_comp_device(j)) - 1e-9
+
+
 @given(st.data())
 @settings(max_examples=MAX_EXAMPLES, deadline=None)
 def test_weak_network_never_faster(data):

@@ -1,0 +1,423 @@
+"""repro.fleet.topology: shared edge servers, cross-cell contention,
+cloud queueing, the coupled best-response oracle, and the ISSUE-3
+acceptance criteria — bit-exact 1:1 reduction to the isolated-cell
+path, and topology-aware routing beating topology-blind routing on a
+hot edge."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spaces import A_CLOUD, A_EDGE, SpaceSpec
+from repro.fleet import (FleetConfig, FleetDQN, FleetDQNConfig,
+                         FleetOrchestrator, FleetQConfig, FleetQLearning,
+                         Topology, cloud_load_multiplier, dynamics,
+                         edge_utilization, fleet_bruteforce,
+                         fleet_topology_expected_response,
+                         hot_edge_topology, identity_topology, init_fleet,
+                         make_fleet_env_step, make_topology,
+                         mixed_table5_fleet, random_topology,
+                         simulate_responses, skewed_topology,
+                         step_edge_failures, step_fleet, table5_fleet,
+                         topology_bruteforce, topology_expected_response,
+                         topology_response_times, with_topology)
+from repro.fleet.topology import CLOUD_QUEUE_MAX
+
+
+def _rand_fleet(key, cells, users):
+    rng = np.random.default_rng(key)
+    pu = jnp.asarray(rng.integers(0, 10, (cells, users)), jnp.int32)
+    end_b = jnp.asarray(rng.integers(0, 2, (cells, users)), jnp.int32)
+    edge_b = jnp.asarray(rng.integers(0, 2, cells), jnp.int32)
+    active = jnp.asarray(rng.random((cells, users)) < 0.8)
+    return pu, end_b, edge_b, active
+
+
+# ------------------------------------------------- 1:1 reduction ----------
+def test_identity_topology_reduces_bit_exactly():
+    """ISSUE-3 acceptance: a 1:1 assignment with unit capacities and an
+    unbounded cloud queue reproduces the isolated-cell dynamics
+    BIT-EXACTLY (assert_array_equal, not allclose)."""
+    pu, end_b, edge_b, active = _rand_fleet(0, 32, 5)
+    topo = identity_topology(32)
+    iso_t = dynamics.response_times(pu, end_b, edge_b, active=active,
+                                    xp=jnp)
+    topo_t = topology_response_times(pu, end_b, edge_b, topo,
+                                     active=active)
+    np.testing.assert_array_equal(np.asarray(iso_t), np.asarray(topo_t))
+    iso = dynamics.expected_response(pu, end_b, edge_b, active=active,
+                                     xp=jnp)
+    top = topology_expected_response(pu, end_b, edge_b, topo,
+                                     active=active)
+    for a, b in zip(iso, top):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_identity_topology_numpy_path_matches_jax():
+    pu, end_b, edge_b, active = _rand_fleet(1, 8, 3)
+    topo = identity_topology(8)
+    j = topology_response_times(pu, end_b, edge_b, topo, active=active)
+    n = topology_response_times(np.asarray(pu), np.asarray(end_b),
+                                np.asarray(edge_b), topo,
+                                active=np.asarray(active), xp=np)
+    np.testing.assert_allclose(np.asarray(j), n, rtol=1e-5)
+
+
+def test_simulate_responses_identity_topology_bit_exact():
+    """The full env path (noise on) is also unchanged by the identity
+    topology: same key -> bit-identical responses and counts."""
+    scen = mixed_table5_fleet(jax.random.PRNGKey(3), 16, 3)
+    scen_t = with_topology(scen, identity_topology(16))
+    pu = jnp.asarray(np.random.default_rng(5).integers(0, 10, (16, 3)),
+                     jnp.int32)
+    k = jax.random.PRNGKey(9)
+    ms_a, acc_a, cnt_a = simulate_responses(k, scen, pu, 0.02)
+    ms_b, acc_b, cnt_b = simulate_responses(k, scen_t, pu, 0.02)
+    np.testing.assert_array_equal(np.asarray(ms_a), np.asarray(ms_b))
+    np.testing.assert_array_equal(np.asarray(acc_a), np.asarray(acc_b))
+    np.testing.assert_array_equal(np.asarray(cnt_a), np.asarray(cnt_b))
+
+
+# ------------------------------------------------ shared contention -------
+def test_shared_edge_aggregates_counts_across_cells():
+    """Two cells pinned to one edge: each sees the OTHER's edge jobs.
+    The result must equal the single-cell kernel with the summed count
+    passed through the counts-override seam."""
+    users = 3
+    scen = table5_fleet("EXP-A", cells=2, users=users)
+    topo = Topology(jnp.zeros(2, jnp.int32), jnp.ones(1, jnp.float32),
+                    jnp.float32(np.inf))
+    pu = jnp.full((2, users), A_EDGE, jnp.int32)
+    got = topology_response_times(pu, scen.end_b, scen.edge_b, topo,
+                                  active=scen.member)
+    want = dynamics.response_times(np.asarray(pu[0]),
+                                   np.asarray(scen.end_b[0]),
+                                   int(scen.edge_b[0]),
+                                   counts=(2 * users, 0))
+    np.testing.assert_allclose(np.asarray(got[0]), want, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[1]), want, rtol=1e-5)
+    # and sharing is strictly slower than owning the edge
+    alone = dynamics.response_times(pu, scen.end_b, scen.edge_b, xp=jnp)
+    assert (np.asarray(got) > np.asarray(alone)).all()
+
+
+def test_edge_capacity_tier_divides_effective_load():
+    """A capacity-2 edge serving 2N jobs behaves like a unit edge
+    serving N jobs."""
+    users = 2
+    scen = table5_fleet("EXP-A", cells=2, users=users)
+    pu = jnp.full((2, users), A_EDGE, jnp.int32)
+    cap2 = Topology(jnp.zeros(2, jnp.int32),
+                    jnp.full((1,), 2.0, jnp.float32), jnp.float32(np.inf))
+    got = topology_response_times(pu, scen.end_b, scen.edge_b, cap2,
+                                  active=scen.member)
+    want = dynamics.response_times(np.asarray(pu[0]),
+                                   np.asarray(scen.end_b[0]),
+                                   int(scen.edge_b[0]),
+                                   counts=(users, 0))
+    np.testing.assert_allclose(np.asarray(got[0]), want, rtol=1e-5)
+
+
+def test_cloud_queue_inflates_cloud_latency_only():
+    """A finite cloud queue slows cloud offloaders fleet-wide but leaves
+    local and edge users untouched."""
+    users = 3
+    scen = table5_fleet("EXP-A", cells=8, users=users)
+    pu = jnp.asarray(np.tile([0, A_EDGE, A_CLOUD], (8, 1)), jnp.int32)
+    unbounded = with_topology(scen, identity_topology(8))
+    queued = with_topology(
+        scen, Topology(jnp.arange(8, dtype=jnp.int32),
+                       jnp.ones(8, jnp.float32), jnp.float32(4.0)))
+    t_u = np.asarray(topology_response_times(
+        pu, scen.end_b, scen.edge_b, unbounded.topo, active=scen.member))
+    t_q = np.asarray(topology_response_times(
+        pu, scen.end_b, scen.edge_b, queued.topo, active=scen.member))
+    # 8 cloud jobs on a 4-slot queue: rho=2 -> saturated multiplier
+    np.testing.assert_array_equal(t_q[:, 0], t_u[:, 0])    # local
+    np.testing.assert_array_equal(t_q[:, 1], t_u[:, 1])    # edge
+    assert (t_q[:, 2] > t_u[:, 2]).all()                   # cloud
+
+
+def test_cloud_load_multiplier_shape_and_saturation():
+    assert float(cloud_load_multiplier(0, np.inf, xp=np)) == 1.0
+    assert float(cloud_load_multiplier(1000, np.inf, xp=np)) == 1.0
+    m = [float(cloud_load_multiplier(n, 8.0, xp=np)) for n in range(0, 32)]
+    assert m[0] == 1.0
+    assert all(b >= a for a, b in zip(m, m[1:]))           # monotone
+    assert m[-1] == CLOUD_QUEUE_MAX                        # saturates
+    assert float(cloud_load_multiplier(4.0, 8.0, xp=np)) == pytest.approx(2.0)
+
+
+# ------------------------------------------------------ generators --------
+def test_topology_generators_seedable_and_bounded():
+    k = jax.random.PRNGKey(0)
+    t1 = random_topology(k, 64, 8, capacity_tiers=(1.0, 2.0))
+    t2 = random_topology(k, 64, 8, capacity_tiers=(1.0, 2.0))
+    np.testing.assert_array_equal(np.asarray(t1.cell_edge),
+                                  np.asarray(t2.cell_edge))
+    assert t1.n_edges == 8 and t1.cells == 64
+    ce = np.asarray(t1.cell_edge)
+    assert ce.min() >= 0 and ce.max() < 8
+    # capacity tiers cycle deterministically
+    np.testing.assert_allclose(np.asarray(t1.edge_capacity),
+                               [1.0, 2.0] * 4)
+
+
+def test_skewed_topology_makes_edge_zero_hottest():
+    topo = skewed_topology(jax.random.PRNGKey(1), 512, 8, skew=2.0)
+    loads = np.bincount(np.asarray(topo.cell_edge), minlength=8)
+    assert loads[0] == loads.max()
+    assert loads[0] > 512 / 8          # clearly above uniform
+
+
+def test_hot_edge_topology_deterministic_split():
+    topo = hot_edge_topology(20, 4, hot_fraction=0.6)
+    ce = np.asarray(topo.cell_edge)
+    assert (ce[:12] == 0).all()
+    assert set(ce[12:]) == {1, 2, 3}
+    # single-edge degenerate case still works
+    assert (np.asarray(hot_edge_topology(6, 1).cell_edge) == 0).all()
+
+
+def test_make_topology_from_fleet_config():
+    cfg = FleetConfig(cells=32, users=2, n_edges=4, assignment="skewed",
+                      capacity_tiers=(1.0, 0.5), cloud_servers=16.0)
+    topo = make_topology(jax.random.PRNGKey(0), cfg)
+    assert topo.n_edges == 4 and float(topo.cloud_servers) == 16.0
+    assert make_topology(jax.random.PRNGKey(0),
+                         FleetConfig(cells=4, users=2)) is None
+    with pytest.raises(ValueError, match="assignment"):
+        make_topology(jax.random.PRNGKey(0),
+                      FleetConfig(cells=4, users=2, n_edges=2,
+                                  assignment="mesh"))
+
+
+def test_init_fleet_attaches_topology_deterministically():
+    cfg = FleetConfig(cells=16, users=3, n_edges=4, cloud_servers=32.0)
+    s = init_fleet(jax.random.PRNGKey(7), cfg)
+    assert s.topo is not None and s.topo.n_edges == 4
+    assert float(s.topo.cloud_servers) == 32.0
+    s2 = init_fleet(jax.random.PRNGKey(7), cfg)
+    np.testing.assert_array_equal(np.asarray(s.topo.cell_edge),
+                                  np.asarray(s2.topo.cell_edge))
+    np.testing.assert_array_equal(np.asarray(s.end_b),
+                                  np.asarray(s2.end_b))
+    # configs without n_edges never build one (and, because the key is
+    # only split 5 ways when a topology is configured, they keep the
+    # exact random streams of the pre-topology code)
+    assert init_fleet(jax.random.PRNGKey(7),
+                      FleetConfig(cells=16, users=3)).topo is None
+
+
+# -------------------------------------------------- failure events --------
+def test_step_edge_failures_reroutes_off_the_failed_edge():
+    topo = hot_edge_topology(32, 4, hot_fraction=0.5)
+    before = np.asarray(topo.cell_edge)
+    after_t = step_edge_failures(jax.random.PRNGKey(0), topo, 1.0)
+    after = np.asarray(after_t.cell_edge)
+    moved = before != after
+    assert moved.any()
+    failed = set(before[moved])
+    assert len(failed) == 1                    # exactly one edge failed
+    (failed,) = failed
+    assert failed not in set(after)            # nobody remains on it
+    assert (after[~moved] == before[~moved]).all()
+    # p_fail=0 and single-edge topologies are no-ops
+    same = step_edge_failures(jax.random.PRNGKey(0), topo, 0.0)
+    np.testing.assert_array_equal(np.asarray(same.cell_edge), before)
+    one = hot_edge_topology(8, 1)
+    assert step_edge_failures(jax.random.PRNGKey(0), one, 1.0) is one
+
+
+def test_step_fleet_applies_edge_failures_under_jit():
+    cfg = FleetConfig(cells=32, users=2, n_edges=4, p_edge_fail=1.0)
+    s = init_fleet(jax.random.PRNGKey(0), cfg)
+    stepper = jax.jit(lambda k, s: step_fleet(k, s, cfg))
+    s2 = stepper(jax.random.PRNGKey(1), s)
+    assert (np.asarray(s2.topo.cell_edge)
+            != np.asarray(s.topo.cell_edge)).any()
+    # without p_edge_fail the topology rides along unchanged
+    cfg0 = dataclasses.replace(cfg, p_edge_fail=0.0)
+    s3 = jax.jit(lambda k, s: step_fleet(k, s, cfg0))(
+        jax.random.PRNGKey(1), s)
+    np.testing.assert_array_equal(np.asarray(s3.topo.cell_edge),
+                                  np.asarray(s.topo.cell_edge))
+
+
+# ------------------------------------------------------- oracle -----------
+def test_topology_bruteforce_identity_matches_isolated_oracle():
+    """Under the 1:1 identity topology the coupled oracle must terminate
+    at the isolated per-cell optimum in a single sweep."""
+    scen = mixed_table5_fleet(jax.random.PRNGKey(2), 16, 2)
+    spec = SpaceSpec(2)
+    pu = jnp.asarray(spec.decode_actions_batch(spec.all_actions()))
+    iso_ms, iso_idx = fleet_bruteforce(scen, pu, 85.0)
+    scen_t = with_topology(scen, identity_topology(16))
+    ms, idx, converged, rounds = topology_bruteforce(scen_t, pu, 85.0)
+    assert converged and rounds == 1
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(iso_idx))
+    np.testing.assert_allclose(np.asarray(ms), np.asarray(iso_ms),
+                               rtol=1e-6)
+
+
+def test_fleet_bruteforce_dispatches_on_topology():
+    scen = mixed_table5_fleet(jax.random.PRNGKey(2), 8, 2)
+    spec = SpaceSpec(2)
+    pu = jnp.asarray(spec.decode_actions_batch(spec.all_actions()))
+    scen_t = with_topology(scen, hot_edge_topology(8, 2, cloud_servers=4.0))
+    ms_t, idx_t = fleet_bruteforce(scen_t, pu, 89.0)
+    want = topology_bruteforce(scen_t, pu, 89.0)
+    np.testing.assert_array_equal(np.asarray(idx_t), np.asarray(want[1]))
+    np.testing.assert_allclose(np.asarray(ms_t), np.asarray(want[0]))
+    # infeasible thresholds still fail loudly through the dispatch
+    with pytest.raises(ValueError, match="no feasible action"):
+        fleet_bruteforce(scen_t, pu, 99.0)
+
+
+def test_topology_aware_beats_blind_routing_on_hot_edge():
+    """ISSUE-3 acceptance: under a hot-edge scenario the best-response
+    (topology-aware) decisions earn strictly more expected reward than
+    the isolated-optimal (topology-blind) decisions evaluated under the
+    same shared contention."""
+    cells, users, th = 24, 2, 89.0
+    scen = mixed_table5_fleet(jax.random.PRNGKey(0), cells, users)
+    topo = hot_edge_topology(cells, 4, hot_fraction=0.6, cloud_servers=8.0)
+    scen_t = with_topology(scen, topo)
+    spec = SpaceSpec(users)
+    pu = jnp.asarray(spec.decode_actions_batch(spec.all_actions()))
+    _, blind_idx = fleet_bruteforce(scen, pu, th)
+    b_ms, b_acc = fleet_topology_expected_response(
+        pu[blind_idx], scen.end_b, scen.edge_b, topo, scen.member)
+    a_ms, a_idx, converged, _ = topology_bruteforce(scen_t, pu, th)
+    _, a_acc = fleet_topology_expected_response(
+        pu[a_idx], scen.end_b, scen.edge_b, topo, scen.member)
+    r_blind = float(dynamics.reward(b_ms, b_acc, th, xp=jnp).mean())
+    r_aware = float(dynamics.reward(a_ms, a_acc, th, xp=jnp).mean())
+    assert converged
+    assert r_aware > r_blind
+    # every cell stays QoS-feasible while routing around the hot edge
+    assert bool(np.asarray(dynamics.feasible(a_acc, th)).all())
+
+
+def test_best_response_never_worse_than_blind_per_round():
+    """The oracle's fixed point never has a higher fleet cost than its
+    isolated-start evaluation (each accepted switch strictly improves
+    the switching cell against the then-current background)."""
+    scen = mixed_table5_fleet(jax.random.PRNGKey(5), 16, 2)
+    topo = skewed_topology(jax.random.PRNGKey(6), 16, 3, skew=2.0,
+                           cloud_servers=6.0)
+    scen_t = with_topology(scen, topo)
+    spec = SpaceSpec(2)
+    pu = jnp.asarray(spec.decode_actions_batch(spec.all_actions()))
+    _, blind_idx = fleet_bruteforce(scen, pu, 89.0)
+    blind_ms, _ = fleet_topology_expected_response(
+        pu[blind_idx], scen.end_b, scen.edge_b, topo, scen.member)
+    ms, _, converged, _ = topology_bruteforce(scen_t, pu, 89.0)
+    assert converged
+    assert float(np.mean(ms)) <= float(np.mean(blind_ms)) + 1e-6
+
+
+# -------------------------------------------------- agents + serving ------
+def test_fleet_env_step_with_topology_in_scan():
+    cfg = FleetConfig(cells=16, users=2, n_edges=4, assignment="skewed",
+                      cloud_servers=8.0, p_edge_fail=0.1)
+    scen = init_fleet(jax.random.PRNGKey(0), cfg)
+    env_step = make_fleet_env_step(cfg, threshold=85.0)
+
+    def run(key, scen, actions):
+        def body(carry, a):
+            key, scen = carry
+            key, k = jax.random.split(key)
+            scen2, counts, ms, acc, r = env_step(k, scen, a)
+            return (key, scen2), (ms, r)
+        return jax.lax.scan(body, (key, scen), actions)
+
+    acts = jnp.asarray(np.random.default_rng(0).integers(0, 10, (10, 16, 2)),
+                       jnp.int32)
+    (_, scen2), (ms, r) = jax.jit(run)(jax.random.PRNGKey(1), scen, acts)
+    assert np.isfinite(np.asarray(ms)).all()
+    assert int(scen2.t) == 10 and scen2.topo is not None
+
+
+def test_agents_train_on_topology_fleet():
+    """Both agents run their jitted training loops on a shared-edge
+    fleet, and train() scores them against the coupled oracle."""
+    cfg = FleetConfig(cells=16, users=2, n_edges=4, assignment="skewed",
+                      cloud_servers=8.0)
+    scen = init_fleet(jax.random.PRNGKey(1), cfg)
+    tab = FleetQLearning(scen, cfg, FleetQConfig(eps_decay=5e-3), seed=0)
+    res = tab.train(max_steps=400, check_every=200)
+    assert 0.0 <= res.frac_converged <= 1.0
+    assert res.optimal_ms.shape == (16,)
+    dqn = FleetDQN(scen, cfg, FleetDQNConfig(), seed=0)
+    dqn.run(30)
+    assert dqn.greedy_decisions().shape == (16, 2)
+
+
+def test_orchestrator_reports_per_edge_utilization():
+    cfg = FleetConfig(cells=12, users=2, n_edges=3, cloud_servers=8.0)
+    scen = init_fleet(jax.random.PRNGKey(2), cfg)
+    agent = FleetQLearning(scen, cfg, seed=0)
+    agent.step()
+    orch = FleetOrchestrator(agent)
+    dec, ids, util = orch.route(with_edge_util=True)
+    assert util.shape == (3,)
+    want = edge_utilization(dec, agent.scen.topo, active=agent.scen.active)
+    np.testing.assert_allclose(np.asarray(util), np.asarray(want))
+    # isolated fleets report per-cell loads via the identity topology
+    iso = mixed_table5_fleet(jax.random.PRNGKey(3), 8, 2)
+    a2 = FleetQLearning(iso, FleetConfig(cells=8, users=2), seed=0)
+    _, _, util2 = FleetOrchestrator(a2).route(with_edge_util=True)
+    assert util2.shape == (8,)
+    assert (np.asarray(util2) >= 0).all()
+
+
+def test_encode_fleet_state_topology_features():
+    from repro.fleet import encode_fleet_state
+    from repro.fleet.policy import state_dim
+    users = 2
+    scen = table5_fleet("EXP-A", cells=4, users=users)
+    counts = jnp.asarray([[2, 1]] * 4, jnp.int32)
+    base = 3 * users
+    # isolated: shared load == own load, capacity 1, cloud util 0
+    s = np.asarray(encode_fleet_state(counts, scen))
+    assert s.shape == (4, state_dim(users))
+    np.testing.assert_allclose(s[:, base + 4], s[:, base + 1])
+    np.testing.assert_allclose(s[:, base + 5], 1.0)
+    np.testing.assert_allclose(s[:, base + 6], 0.0)
+    # shared edge: all 4 cells on one capacity-2 edge, finite cloud
+    topo = Topology(jnp.zeros(4, jnp.int32), jnp.full((1,), 2.0),
+                    jnp.float32(16.0))
+    s_t = np.asarray(encode_fleet_state(counts, with_topology(scen, topo)))
+    # 4 cells x 2 edge jobs on one capacity-2 edge: 8 / 2.0, then / N
+    np.testing.assert_allclose(s_t[:, base + 4], 8 / 2.0 / users)
+    np.testing.assert_allclose(s_t[:, base + 5], 2.0)
+    np.testing.assert_allclose(s_t[:, base + 6], 4 / 16.0)
+    # per-user blocks are untouched by topology features
+    np.testing.assert_array_equal(s_t[:, :base + 4], s[:, :base + 4])
+
+
+def test_fleet_dqn_sees_neighbor_pressure():
+    """The shared policy's per-edge load feature makes a cell's
+    Q-values depend on its NEIGHBORS' jobs: holding cell 0's own counts
+    fixed, loading the other cells on its edge must change cell 0's
+    values (the whole point of threading topology into the encoder)."""
+    from repro.fleet import encode_fleet_state
+    users = 2
+    cfg = FleetConfig(cells=8, users=users, n_edges=2)
+    scen = init_fleet(jax.random.PRNGKey(4), cfg)
+    dqn = FleetDQN(scen, cfg, FleetDQNConfig(), seed=1)
+    dqn.run(10)
+    quiet = jnp.zeros((8, 2), jnp.int32).at[0, 0].set(1)
+    noisy = jnp.ones((8, 2), jnp.int32).at[0, 0].set(1).at[0, 1].set(0)
+    s_q = encode_fleet_state(quiet, scen)
+    s_n = encode_fleet_state(noisy, scen)
+    # cell 0's own-count features are identical; only shared load moved
+    np.testing.assert_array_equal(
+        np.asarray(s_q[0, :3 * users + 4]),
+        np.asarray(s_n[0, :3 * users + 4]))
+    q_quiet = dqn._per_user_q(dqn.params, s_q)[0]
+    q_noisy = dqn._per_user_q(dqn.params, s_n)[0]
+    assert (np.asarray(q_quiet) != np.asarray(q_noisy)).any()
