@@ -30,7 +30,8 @@ import numpy as np
 from benchmarks.common import FAST, Timer, emit, save_json
 from repro.core import EXPERIMENTS, EndEdgeCloudEnv
 from repro.fleet import (FleetConfig, FleetQConfig, FleetQLearning,
-                         make_fleet_env_step, mixed_table5_fleet)
+                         SyntheticSource, make_fleet_env_step,
+                         mixed_table5_fleet)
 
 CELLS = 1024 if FAST else 4096
 USERS = 5
@@ -54,7 +55,7 @@ def bench_fleet_env(host_steps: int, cells: int = CELLS,
     steps per host call over precomputed per-user actions)."""
     cfg = FleetConfig(cells=cells, users=USERS)
     scen = mixed_table5_fleet(jax.random.PRNGKey(0), cells, USERS)
-    env_step = make_fleet_env_step(cfg)
+    env_step = make_fleet_env_step(SyntheticSource(cfg))
 
     def run_chunk(key, scen, actions):          # actions: (chunk, cells, N)
         def body(carry, a):

@@ -31,9 +31,10 @@ import numpy as np
 
 from benchmarks.common import FAST, Timer, emit, save_json
 from repro.core.spaces import SpaceSpec
-from repro.fleet import (FleetConfig, dynamics, fleet_bruteforce,
+from repro.fleet import (FleetConfig, SyntheticSource, dynamics,
+                         fleet_bruteforce,
                          fleet_topology_expected_response,
-                         hot_edge_topology, init_fleet, make_fleet_env_step,
+                         hot_edge_topology, make_fleet_env_step,
                          mixed_table5_fleet, topology_bruteforce,
                          with_topology)
 
@@ -47,8 +48,9 @@ def bench_env(host_steps: int, cells: int, n_edges, chunk: int = 50):
     cfg = FleetConfig(cells=cells, users=USERS, n_edges=n_edges,
                       assignment="skewed", cloud_servers=4.0 * cells
                       if n_edges else float("inf"))
-    scen = init_fleet(jax.random.PRNGKey(0), cfg)
-    env_step = make_fleet_env_step(cfg)
+    source = SyntheticSource(cfg)
+    scen, _ = source.reset(jax.random.PRNGKey(0))
+    env_step = make_fleet_env_step(source)
 
     def run_chunk(key, scen, actions):          # actions: (chunk, cells, N)
         def body(carry, a):

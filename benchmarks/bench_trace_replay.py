@@ -1,0 +1,149 @@
+"""Trace replay + serving bridge (ISSUE-4): throughput of the fleet env
+step when fed from a recorded ``TraceSource`` vs the synthetic
+generators, and the prediction-vs-measured latency gap when routed
+decisions are dispatched to REAL serving engines through
+``FleetOrchestrator.route(dispatch=engines)`` (the paper's Table-8
+methodology: the latency model's prediction next to the measured
+wall-clock of actual batched inference).
+
+A trace step is a pure gather of prerecorded frames, so replay should
+be at least as fast as generating links/arrivals/churn on the fly —
+``trace_replay_speedup_x`` reports the ratio.
+
+Emits:
+  trace_env_cells{c},<us/env-step>,steps_per_s=... (trace source)
+  trace_replay_speedup_x,<ratio>,trace/synthetic env-step throughput
+  trace_serving_requests,<n>,requests dispatched through the bridge
+  trace_serving_gap_x,<ratio>,measured/predicted mean latency ...
+
+``--tiny`` (CLI) shrinks every budget to a few seconds of work — the CI
+smoke mode that keeps the trace-replay AND serving-bridge paths from
+rotting.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FAST, Timer, emit, save_json
+from repro.fleet import (FleetConfig, FleetOrchestrator, FleetQConfig,
+                         FleetQLearning, SyntheticSource, TraceSource,
+                         make_fleet_env_step, record_trace)
+
+USERS = 3
+
+
+def _bench_env_steps(source, scen0, host_steps: int, chunk: int) -> float:
+    """env-steps/sec of ``make_fleet_env_step(source)`` inside a jitted
+    scan (same harness as bench_fleet_throughput/bench_topology)."""
+    env_step = make_fleet_env_step(source)
+    cells = scen0.cells
+
+    def run_chunk(key, scen, actions):          # actions: (chunk, cells, N)
+        def body(carry, a):
+            key, scen = carry
+            key, k = jax.random.split(key)
+            scen2, _, ms, _, _ = env_step(k, scen, a)
+            return (key, scen2), ms.mean()
+        (key, scen), ms = jax.lax.scan(body, (key, scen), actions)
+        return key, scen, ms
+
+    run_chunk = jax.jit(run_chunk)
+    rng = np.random.default_rng(1)
+    actions = jnp.asarray(rng.integers(0, 10, (chunk, cells, USERS)),
+                          jnp.int32)
+    key = jax.random.PRNGKey(2)
+    key, scen, _ = run_chunk(key, scen0, actions)    # compile
+    jax.block_until_ready(scen.end_b)
+    n_chunks = max(1, host_steps // chunk)
+    with Timer() as t:
+        for _ in range(n_chunks):
+            key, scen, ms = run_chunk(key, scen, actions)
+        jax.block_until_ready(ms)
+    return n_chunks * chunk * cells / t.seconds
+
+
+def bench_replay_throughput(cells: int, horizon: int, host_steps: int,
+                            chunk: int):
+    """Record a synthetic stream, then compare env-step throughput of
+    replaying the trace vs generating the scenario on the fly."""
+    cfg = FleetConfig(cells=cells, users=USERS, p_r2w=0.05, p_w2r=0.15,
+                      arrival_rate=1.0, diurnal_period=horizon,
+                      p_join=0.02, p_leave=0.02, min_users=1,
+                      max_users=USERS)
+    synth = SyntheticSource(cfg)
+    trace = TraceSource(record_trace(synth, jax.random.PRNGKey(0), horizon))
+    synth_scen, _ = synth.reset(jax.random.PRNGKey(0))
+    trace_scen, _ = trace.reset(jax.random.PRNGKey(0))
+    synth_sps = _bench_env_steps(synth, synth_scen, host_steps, chunk)
+    trace_sps = _bench_env_steps(trace, trace_scen, host_steps, chunk)
+    emit(f"trace_env_cells{cells}", 1e6 / trace_sps,
+         f"steps_per_s={trace_sps:.0f} replaying a {horizon}-frame trace "
+         f"(synthetic generators {synth_sps:.0f}/s)")
+    emit("trace_replay_speedup_x", trace_sps / synth_sps,
+         "trace/synthetic env-step throughput (replay is a frame gather; "
+         ">= ~1 means traces are never the bottleneck)")
+    return trace_sps, synth_sps
+
+
+def bench_serving_bridge(train_steps: int, max_new_tokens: int = 2):
+    """Train briefly on the golden trace fixture, route through the
+    orchestrator, dispatch every active user to real engines, and report
+    the prediction-vs-measured latency gap."""
+    from repro.configs import get_config
+    from repro.launch.serve import build_engines
+    fixture = os.path.join(os.path.dirname(__file__), "..", "tests",
+                           "data", "trace_small.npz")
+    src = TraceSource.load(fixture)
+    agent = FleetQLearning(src, cfg=FleetQConfig(eps_decay=5e-3), seed=0)
+    agent.run(train_steps)
+    engines = build_engines(get_config("edge-ladder"), variants=("d0",),
+                            max_len=48)
+    with Timer() as t:
+        res = FleetOrchestrator(agent).route(
+            dispatch=engines, max_new_tokens=max_new_tokens, batch_size=4,
+            prompt_len=8)
+    s = res.summary()
+    emit("trace_serving_requests", s["requests"],
+         f"requests dispatched in {s['batches']} engine batches "
+         f"({t.seconds:.1f}s wall incl. compile)")
+    emit("trace_serving_gap_x", s["gap_x"],
+         f"measured/predicted mean latency (measured "
+         f"{s['measured_mean_ms']:.0f} ms vs model "
+         f"{s['predicted_mean_ms']:.0f} ms; the paper's Table-8 "
+         "prediction-vs-measured protocol over real engines)")
+    return s
+
+
+def main(tiny: bool = False):
+    if tiny:
+        cells, horizon, steps, chunk, train = 16, 16, 60, 20, 32
+    elif FAST:
+        cells, horizon, steps, chunk, train = 256, 64, 300, 50, 200
+    else:
+        cells, horizon, steps, chunk, train = 1024, 128, 1000, 50, 1000
+
+    trace_sps, synth_sps = bench_replay_throughput(cells, horizon, steps,
+                                                   chunk)
+    serve = bench_serving_bridge(train)
+    metrics = {
+        "users": USERS,
+        "trace_env_steps_per_s": trace_sps,
+        "synthetic_env_steps_per_s": synth_sps,
+        "trace_replay_speedup_x": trace_sps / synth_sps,
+        "serving": serve,
+    }
+    save_json("trace_replay", metrics)
+    return metrics
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale budgets (CI smoke)")
+    main(tiny=ap.parse_args().tiny)

@@ -19,7 +19,7 @@ from benchmarks import (bench_adaptation, bench_fig1_motivation,
                         bench_kernels, bench_overhead,
                         bench_table8_decisions, bench_table9_constraints,
                         bench_table10_sota, bench_table11_convergence,
-                        bench_topology)
+                        bench_topology, bench_trace_replay)
 from benchmarks.common import save_json
 
 SUITES = {
@@ -36,10 +36,11 @@ SUITES = {
     "fleet": bench_fleet_throughput,  # beyond-paper: vectorized fleet sim
     "fleet_dqn": bench_fleet_dqn,     # beyond-paper: shared-policy fleet DQN
     "topology": bench_topology,       # beyond-paper: shared edges + cloud q
+    "trace_replay": bench_trace_replay,  # beyond-paper: trace + serving bridge
 }
 
 #: suites whose main() returns the headline dict folded into BENCH_fleet.json
-FLEET_SUITES = ("fleet", "fleet_dqn", "topology")
+FLEET_SUITES = ("fleet", "fleet_dqn", "topology", "trace_replay")
 
 
 def main() -> None:
@@ -71,6 +72,7 @@ def main() -> None:
         tp = fleet_metrics.get("fleet", {})
         dqn = fleet_metrics.get("fleet_dqn", {})
         topo = fleet_metrics.get("topology", {})
+        trace = fleet_metrics.get("trace_replay", {})
         save_json("BENCH_fleet", {
             "env_steps_per_s": tp.get("fleet_env_steps_per_s"),
             "rl_steps_per_s": tp.get("fleet_rl_steps_per_s"),
@@ -80,6 +82,9 @@ def main() -> None:
             "dqn_step_flatness": dqn.get("step_flatness"),
             "topology_env_overhead_x": topo.get("topology_env_overhead_x"),
             "topology_hot_edge_uplift": topo.get("hot_edge_reward_uplift"),
+            "trace_env_steps_per_s": trace.get("trace_env_steps_per_s"),
+            "trace_replay_speedup_x": trace.get("trace_replay_speedup_x"),
+            "trace_serving_gap_x": trace.get("serving", {}).get("gap_x"),
             "suites": fleet_metrics,
         })
         print("# wrote results/BENCH_fleet.json", flush=True)

@@ -1,75 +1,81 @@
 """END-TO-END DRIVER (deliverable b): multi-user inference serving with
-RL orchestration over real engines — the paper's Fig. 4 runtime at
-reduced scale.
+RL orchestration over real engines — the paper's Fig. 4 runtime through
+the redesigned fleet front door (``repro.fleet.api``).
 
-Five simulated end-users issue prompt waves; the cloud-hosted
-Intelligent Orchestrator (trained online) picks (tier, model-variant)
-per user; requests are batched and served by REAL jitted transformer
-engines (the d0..d7 ladder of the edge-ladder config), and measured
-wall-clock response times flow back as the environment signal.
+A small fleet of cells (heterogeneous Table-5 network patterns) is
+trained online by the batched tabular agent; each wave, ONE
+``FleetOrchestrator.route(dispatch=engines)`` call routes every active
+user to a (tier, model-variant), batches the requests per engine
+(``RequestBatcher``), runs REAL jitted transformer engines (the d0..d7
+edge-ladder), and reports the measured wall-clock next to the latency
+model's prediction — the paper's Table-8 predicted-vs-measured
+protocol, now fleet-wide.
 
   PYTHONPATH=src python examples/serve_orchestrated.py [--waves 4]
 """
 import argparse
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import jax
 import numpy as np
 
-from repro.core import (EXPERIMENTS, THRESHOLDS, EndEdgeCloudEnv,
-                        IntelligentOrchestrator, QLearningAgent, train_agent)
 from repro.configs import get_config
+from repro.core import THRESHOLDS
+from repro.fleet import (FleetConfig, FleetOrchestrator, FleetQConfig,
+                         FleetQLearning, SyntheticSource,
+                         mixed_table5_fleet)
 from repro.launch.serve import build_engines
-from repro.serving import Request, RequestBatcher
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", type=int, default=4)
     ap.add_argument("--users", type=int, default=3)
     ap.add_argument("--waves", type=int, default=4)
     ap.add_argument("--threshold", default="85%")
     args = ap.parse_args()
     th = THRESHOLDS[args.threshold]
 
-    print("1) training the Intelligent Orchestrator online...")
-    env = EndEdgeCloudEnv(args.users, EXPERIMENTS["EXP-A"],
-                          accuracy_threshold=th, seed=0)
-    agent = QLearningAgent(env.spec, seed=0)
-    res = train_agent(agent, env, 20000)
-    print(f"   converged at {res.converged_at}; greedy {res.greedy_ms:.1f} ms "
-          f"(optimal {res.best_ms:.1f} ms)")
+    print("1) training the fleet orchestrator online "
+          f"({args.cells} cells x {args.users} users)...")
+    cfg = FleetConfig(cells=args.cells, users=args.users)
+    scen = mixed_table5_fleet(jax.random.PRNGKey(0), args.cells, args.users)
+    agent = FleetQLearning(SyntheticSource(cfg, scen=scen),
+                           cfg=FleetQConfig(eps_decay=2e-3,
+                                            accuracy_threshold=th), seed=0)
+    res = agent.train(max_steps=8000, check_every=200)
+    print(f"   {100 * res.frac_converged:.0f}% of cells converged; median "
+          f"greedy {np.median(res.greedy_ms):.1f} ms "
+          f"(optimal {np.median(res.optimal_ms):.1f} ms)")
 
-    print("2) bringing up tier engines (device/edge/cloud x variant ladder)...")
-    cfg = get_config("edge-ladder")
-    engines = build_engines(cfg, variants=("d0", "d2", "d5", "d7"), max_len=48)
-    # fill ladder gaps: any local decision maps to nearest available variant
-    avail = sorted(int(v[1]) for v in engines["S"])
+    print("2) bringing up tier engines (device/edge/cloud x variant "
+          "ladder)...")
+    engines = build_engines(get_config("edge-ladder"),
+                            variants=("d0", "d2", "d5", "d7"), max_len=48)
 
-    orch = IntelligentOrchestrator(agent, env, engines)
-    state = env.reset()
-    rng = np.random.default_rng(0)
-    all_ms = []
+    print("3) route -> batch -> serve, one call per wave:")
+    orch = FleetOrchestrator(agent)
+    gaps = []
     for wave in range(args.waves):
-        decision = orch.decide(state)
-        decision = tuple(a if a >= 8 else min(avail, key=lambda v: abs(v - a))
-                         for a in decision)
-        prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
-                   for _ in range(args.users)]
-        t0 = time.perf_counter()
-        results = orch.dispatch(decision, prompts)
-        joint = env.spec.encode_action(decision)
-        state, _, info = env.step(joint)
-        all_ms.append(info["avg_response_ms"])
-        pretty = [f"u{u}:{v}@{t}({ms:.0f}ms)" for u, (v, t, ms)
-                  in enumerate(results)]
-        print(f"   wave {wave}: {' '.join(pretty)}  "
-              f"env_avg={info['avg_response_ms']:.1f}ms "
-              f"acc={info['avg_accuracy']:.1f}%")
-    print(f"3) mean env response over {args.waves} waves: "
-          f"{np.mean(all_ms):.1f} ms (threshold {args.threshold})")
+        out = orch.route(dispatch=engines, max_new_tokens=4, batch_size=4,
+                         prompt_len=12, seed=wave)
+        s = out.summary()
+        gaps.append(s["gap_x"])
+        pretty = [f"c{r.cell}u{r.user}:{r.variant}@{r.tier}"
+                  f"({r.measured_ms:.0f}ms/pred {r.predicted_ms:.0f}ms)"
+                  for r in out.served[:6]]
+        more = "" if len(out.served) <= 6 else f" +{len(out.served) - 6} more"
+        print(f"   wave {wave}: {s['requests']} requests in {s['batches']} "
+              f"batches, measured {s['measured_mean_ms']:.0f} ms vs "
+              f"predicted {s['predicted_mean_ms']:.0f} ms "
+              f"(gap {s['gap_x']:.2f}x)")
+        print(f"      {' '.join(pretty)}{more}")
+        agent.step()                    # keep learning online between waves
+    print(f"4) mean measured/predicted gap over {args.waves} waves: "
+          f"{np.mean(gaps):.2f}x (threshold {args.threshold})")
 
 
 if __name__ == "__main__":

@@ -64,6 +64,14 @@ class SpaceSpec:
             a //= N_PER_USER_ACTIONS
         return out
 
+    def encode_actions_batch(self, per_user: np.ndarray) -> np.ndarray:
+        """(K, N) per-user ids -> (K,) joint ids (the vectorized
+        ``encode_action``, inverse of ``decode_actions_batch``)."""
+        a = np.zeros(np.asarray(per_user).shape[0], np.int64)
+        for u in range(self.n_users):
+            a = a * N_PER_USER_ACTIONS + np.asarray(per_user)[:, u]
+        return a
+
     def all_actions(self) -> np.ndarray:
         return np.arange(self.n_joint_actions, dtype=np.int64)
 

@@ -5,11 +5,13 @@ it maps back to the paper's single-cell testbed.
 
 Layering: ``dynamics`` is a leaf module, deliberately free of
 ``repro.core`` imports, and is the only part of this package that
-``core.env`` depends on. ``scenarios``/``population`` import from core,
-so they are loaded lazily here (module ``__getattr__``) — importing
-``repro.core`` pulls in ``repro.fleet`` without ever executing them,
-keeping the core <-> fleet dependency acyclic regardless of which
-package is imported first.
+``core.env`` depends on. ``scenarios``/``population``/``api`` import
+from core, so they are loaded lazily here (module ``__getattr__``) —
+importing ``repro.core`` pulls in ``repro.fleet`` without ever
+executing them, keeping the core <-> fleet dependency acyclic
+regardless of which package is imported first. ``api`` is the front
+door (ScenarioSource / FleetPolicy / route-to-serving); see its
+docstring and README.md.
 """
 from repro.fleet import dynamics
 from repro.fleet.dynamics import (accuracies, cell_response_times,
@@ -18,16 +20,20 @@ from repro.fleet.dynamics import (accuracies, cell_response_times,
                                   fleet_expected_response, response_times,
                                   reward, t_comp_device)
 
-_SCENARIOS = ("FleetConfig", "FleetScenario", "diurnal_rate",
-              "heterogeneous_sizes", "init_fleet", "init_links",
-              "make_topology", "mixed_table5_fleet", "poisson_active",
-              "step_churn", "step_fleet", "step_links", "table5_fleet",
-              "with_topology")
-_POPULATION = ("FleetOrchestrator", "FleetQConfig", "FleetQLearning",
-               "FleetTrainResult", "default_actions", "fleet_bruteforce",
+_SCENARIOS = ("FleetConfig", "FleetScenario", "arrivals_from_timestamps",
+              "diurnal_rate", "heterogeneous_sizes", "init_fleet",
+              "init_links", "make_topology", "mixed_table5_fleet",
+              "poisson_active", "step_churn", "step_fleet", "step_links",
+              "table5_fleet", "with_topology")
+_POPULATION = ("FleetQConfig", "FleetQLearning", "FleetTrainResult",
+               "check_pad_width", "default_actions", "fleet_bruteforce",
                "make_fleet_env_step", "nominal_expected_response",
-               "simulate_responses", "topology_bruteforce",
-               "train_against_oracle")
+               "resolve_source", "simulate_responses",
+               "topology_bruteforce", "train_against_oracle")
+_API = ("FleetOrchestrator", "FleetPolicy", "FleetTrace", "OraclePolicy",
+        "RouteResult", "ScenarioSource", "ServedRequest", "StatelessPolicy",
+        "StaticPolicy", "SyntheticSource", "TraceSource", "load_trace",
+        "make_env_step", "record_trace", "save_trace")
 _TOPOLOGY = ("Topology", "cloud_load_multiplier", "edge_capacities",
              "edge_utilization", "fleet_topology_expected_response",
              "hot_edge_topology", "identity_topology", "random_topology",
@@ -42,7 +48,7 @@ __all__ = [
     "dynamics", "accuracies", "cell_response_times", "expected_response",
     "feasible", "fleet_actions_expected_response",
     "fleet_expected_response", "response_times", "reward", "t_comp_device",
-    *_SCENARIOS, *_POPULATION, *_REPLAY, *_POLICY, *_TOPOLOGY,
+    *_SCENARIOS, *_POPULATION, *_API, *_REPLAY, *_POLICY, *_TOPOLOGY,
 ]
 
 
@@ -50,6 +56,8 @@ def __getattr__(name):
     import importlib
     if name in _SCENARIOS or name == "scenarios":
         mod = importlib.import_module("repro.fleet.scenarios")
+    elif name in _API or name == "api":
+        mod = importlib.import_module("repro.fleet.api")
     elif name in _POPULATION or name == "population":
         mod = importlib.import_module("repro.fleet.population")
     elif name in _REPLAY or name == "replay":
@@ -61,6 +69,6 @@ def __getattr__(name):
     else:
         raise AttributeError(
             f"module 'repro.fleet' has no attribute {name!r}")
-    return (mod if name in ("scenarios", "population", "replay", "policy",
-                            "topology")
+    return (mod if name in ("scenarios", "population", "api", "replay",
+                            "policy", "topology")
             else getattr(mod, name))

@@ -1,0 +1,710 @@
+"""The fleet front door: one seam from scenario data to real serving.
+
+The paper's orchestrator is a single online loop — observe the network
+and workload, pick a (tier, model-variant) per user, dispatch to a real
+serving tier — but PRs 1-3 grew three ad-hoc entry styles: hand-built
+``FleetScenario``s, two agents with divergent call signatures, and a
+``FleetOrchestrator.route`` that stopped at the latency model. This
+module is the redesigned API that every remaining ROADMAP item plugs
+into:
+
+* **`ScenarioSource`** — ``reset(key) -> (FleetScenario, state)`` /
+  ``step(key, state) -> (FleetScenario, state)``, the one seam that
+  feeds training, evaluation, and serving. `SyntheticSource` wraps the
+  ``FleetConfig`` generators (bit-exactly: it delegates to
+  ``init_fleet`` / ``step_fleet`` with the same keys, so every parity
+  test keeps pinning the kernel). `TraceSource` replays a recorded
+  `FleetTrace` — per-cell arrival timestamps, link-quality series, and
+  an optional cells-per-edge deployment map that becomes
+  ``Topology.cell_edge`` + capacity tiers — the evaluation style of
+  DeepEdge (arXiv:2110.01863) and the delay-aware DRL offloading work
+  of Ale et al. Both agents, ``make_fleet_env_step``, and
+  ``train_against_oracle`` accept either.
+* **`FleetPolicy`** — ``decisions(counts, scen)`` / ``expected(scen,
+  counts)``, one surface over ``FleetQLearning``, ``FleetDQN``, the
+  brute-force/best-response oracles (`OraclePolicy`), and the paper's
+  fixed strategies (`StaticPolicy`), so the orchestrator, the
+  benchmarks, and ``holdout_reward_ratio`` stop special-casing agents.
+* **`FleetOrchestrator.route(..., dispatch=engines)`** — the serving
+  bridge: routed (tier, variant) decisions drain into per-tier
+  ``ServingEngine``s via ``RequestBatcher``, and the measured
+  wall-times come back NEXT TO the latency model's predictions
+  (`RouteResult`), the paper's Table-8 predicted-vs-measured
+  methodology at fleet scale.
+
+Old entry points (``population.FleetOrchestrator``,
+``make_fleet_env_step(FleetConfig)``) keep working through thin
+``DeprecationWarning`` shims for one release.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Protocol, Tuple, Union, \
+    runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fleet import dynamics, topology
+from repro.fleet.population import (check_pad_width, default_actions,
+                                    fleet_bruteforce,
+                                    nominal_expected_response)
+from repro.fleet.scenarios import (FleetConfig, FleetScenario,
+                                   arrivals_from_timestamps, init_fleet,
+                                   step_fleet)
+from repro.core.spaces import SpaceSpec
+
+__all__ = [
+    "ScenarioSource", "SyntheticSource", "TraceSource", "FleetTrace",
+    "load_trace", "save_trace", "record_trace", "FleetPolicy",
+    "OraclePolicy", "StatelessPolicy", "StaticPolicy", "FleetOrchestrator",
+    "RouteResult", "ServedRequest", "make_env_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# ScenarioSource — the scenario seam
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class ScenarioSource(Protocol):
+    """Anything that can produce a stream of ``FleetScenario``s.
+
+    ``reset(key)`` yields the initial scenario plus an opaque source
+    state; ``step(key, state)`` advances it. Both must be pure and
+    jit/scan-safe. The built-in sources set ``state_is_scenario = True``
+    (their state IS the scenario pytree), which is what the agents'
+    jitted training loops require — they carry only the scenario.
+    """
+
+    cells: int
+    users: int
+    state_is_scenario: bool
+
+    @property
+    def dynamic(self) -> bool:
+        """Does the scenario stream move between steps? (Drives the
+        per-check oracle recompute in ``train_against_oracle``.)"""
+        ...
+
+    def reset(self, key) -> Tuple[FleetScenario, object]: ...
+
+    def step(self, key, state) -> Tuple[FleetScenario, object]: ...
+
+
+def is_source(obj) -> bool:
+    """Duck-typed ScenarioSource check (a ``FleetScenario`` is not one)."""
+    return callable(getattr(obj, "reset", None)) and \
+        callable(getattr(obj, "step", None))
+
+
+def require_scenario_state(source) -> None:
+    """The jitted training loops carry only the scenario; reject sources
+    whose step state is something richer, up front and clearly."""
+    if not getattr(source, "state_is_scenario", False):
+        raise TypeError(
+            f"{type(source).__name__} must set state_is_scenario=True "
+            "(its step state must BE the scenario) to drive a jitted "
+            "fleet training loop; both built-in sources qualify")
+
+
+class SyntheticSource:
+    """`ScenarioSource` over the ``FleetConfig`` generators.
+
+    ``reset`` is ``init_fleet(key, cfg)`` and ``step`` is
+    ``step_fleet(key, scen, cfg)`` — same functions, same key usage, so
+    the generated random streams are bit-exactly the pre-redesign ones
+    (pinned by ``tests/test_fleet_api.py``). Pass ``scen`` to pin an
+    explicitly built initial fleet (e.g. ``mixed_table5_fleet``);
+    ``reset`` then returns it as-is, which is exactly how the agents'
+    legacy ``(scen, FleetConfig)`` constructors behaved.
+    """
+
+    state_is_scenario = True
+
+    def __init__(self, cfg: FleetConfig,
+                 scen: Optional[FleetScenario] = None):
+        self.cfg = cfg
+        self._scen0 = scen
+
+    @property
+    def cells(self) -> int:
+        return self.cfg.cells if self._scen0 is None else self._scen0.cells
+
+    @property
+    def users(self) -> int:
+        return self.cfg.users if self._scen0 is None else self._scen0.users
+
+    @property
+    def dynamic(self) -> bool:
+        c = self.cfg
+        return bool(c.p_r2w or c.p_w2r or c.p_join or c.p_leave
+                    or c.p_edge_fail)
+
+    def reset(self, key):
+        scen = self._scen0 if self._scen0 is not None \
+            else init_fleet(key, self.cfg)
+        return scen, scen
+
+    def step(self, key, state):
+        scen = step_fleet(key, state, self.cfg)
+        return scen, scen
+
+
+# ---------------------------------------------------------------------------
+# recorded traces
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetTrace:
+    """A recorded fleet workload: link-quality series + arrival events.
+
+    end_b        : (T, cells, N) int   per-user end-link series (0 R, 1 W)
+    edge_b       : (T, cells)    int   edge backhaul series
+    arrival_time : (E,) float  request timestamps (seconds)
+    arrival_cell : (E,) int    issuing cell of each request
+    arrival_user : (E,) int    issuing user (slot in the cell's pad)
+    step_duration: ()  float   seconds binned into one fleet step
+    member       : optional (T, cells, N) or (cells, N) bool membership
+                   (None = every slot is a member)
+    cell_edge    : optional (cells,) deployment map — which edge PoP
+                   serves each cell (becomes ``Topology.cell_edge``)
+    edge_capacity: optional (n_edges,) capacity tiers for the PoPs
+    cloud_servers: ()  float   M/M/c cloud queue size (inf = off)
+    """
+    end_b: np.ndarray
+    edge_b: np.ndarray
+    arrival_time: np.ndarray
+    arrival_cell: np.ndarray
+    arrival_user: np.ndarray
+    step_duration: float = 1.0
+    member: Optional[np.ndarray] = None
+    cell_edge: Optional[np.ndarray] = None
+    edge_capacity: Optional[np.ndarray] = None
+    cloud_servers: float = float("inf")
+
+    @property
+    def horizon(self) -> int:
+        return self.end_b.shape[0]
+
+    @property
+    def cells(self) -> int:
+        return self.end_b.shape[1]
+
+    @property
+    def users(self) -> int:
+        return self.end_b.shape[2]
+
+    def member_frames(self) -> np.ndarray:
+        """(T, cells, N) membership mask (broadcast if recorded static)."""
+        if self.member is None:
+            return np.ones(self.end_b.shape, bool)
+        m = np.asarray(self.member, bool)
+        if m.ndim == 2:
+            m = np.broadcast_to(m[None], self.end_b.shape)
+        return m
+
+    def active_frames(self) -> np.ndarray:
+        """(T, cells, N) request mask: membership AND >=1 arrival event
+        binned into that step (``floor(arrival_time / step_duration)``)."""
+        arr = arrivals_from_timestamps(
+            self.arrival_time, self.arrival_cell, self.arrival_user,
+            self.horizon, self.cells, self.users, self.step_duration)
+        return self.member_frames() & arr
+
+    def topology(self) -> Optional[topology.Topology]:
+        """The recorded deployment map as a ``Topology`` (None if the
+        trace has no ``cell_edge``)."""
+        if self.cell_edge is None:
+            return None
+        cap = self.edge_capacity if self.edge_capacity is not None else \
+            np.ones(int(np.max(self.cell_edge)) + 1, np.float32)
+        return topology.Topology(
+            jnp.asarray(self.cell_edge, jnp.int32),
+            jnp.asarray(cap, jnp.float32),
+            jnp.float32(self.cloud_servers))
+
+    def validate(self) -> "FleetTrace":
+        T, cells, users = self.end_b.shape
+        if self.edge_b.shape != (T, cells):
+            raise ValueError(f"edge_b shape {self.edge_b.shape} != "
+                             f"{(T, cells)}")
+        e = len(self.arrival_time)
+        if len(self.arrival_cell) != e or len(self.arrival_user) != e:
+            raise ValueError("arrival_time/cell/user lengths differ")
+        if e:
+            ac = np.asarray(self.arrival_cell)
+            au = np.asarray(self.arrival_user)
+            if ac.min() < 0 or ac.max() >= cells:
+                raise ValueError(
+                    f"arrival_cell out of range [0, {cells}): "
+                    f"[{ac.min()}, {ac.max()}] — a negative index would "
+                    "silently attribute events to the wrong cell")
+            if au.min() < 0 or au.max() >= users:
+                raise ValueError(f"arrival_user out of range [0, {users}): "
+                                 f"[{au.min()}, {au.max()}]")
+        if self.member is not None and \
+                np.asarray(self.member).shape not in ((T, cells, users),
+                                                      (cells, users)):
+            raise ValueError(f"member shape {np.asarray(self.member).shape}"
+                             f" fits neither {(T, cells, users)} nor "
+                             f"{(cells, users)}")
+        if self.cell_edge is not None:
+            ce = np.asarray(self.cell_edge)
+            if ce.shape != (cells,):
+                raise ValueError(f"cell_edge shape {ce.shape} != {(cells,)}")
+            n_edges = int(ce.max()) + 1 if len(ce) else 0
+            if self.edge_capacity is not None and \
+                    len(self.edge_capacity) < n_edges:
+                raise ValueError("edge_capacity shorter than the deployment "
+                                 "map's edge count")
+        return self
+
+
+_TRACE_OPTIONAL = ("member", "cell_edge", "edge_capacity")
+
+
+def save_trace(path, trace: FleetTrace) -> None:
+    """Write a ``FleetTrace`` as an ``.npz`` (the recorded-trace format
+    ``load_trace`` / ``TraceSource`` read)."""
+    trace.validate()
+    arrays = dict(end_b=trace.end_b, edge_b=trace.edge_b,
+                  arrival_time=trace.arrival_time,
+                  arrival_cell=trace.arrival_cell,
+                  arrival_user=trace.arrival_user,
+                  step_duration=np.float64(trace.step_duration),
+                  cloud_servers=np.float64(trace.cloud_servers))
+    for name in _TRACE_OPTIONAL:
+        v = getattr(trace, name)
+        if v is not None:
+            arrays[name] = np.asarray(v)
+    np.savez(path, **arrays)
+
+
+def load_trace(path) -> FleetTrace:
+    """Read a trace ``.npz`` written by ``save_trace`` (round-trips all
+    arrays bit-exactly)."""
+    with np.load(path) as z:
+        kw = {name: z[name] for name in _TRACE_OPTIONAL if name in z.files}
+        return FleetTrace(end_b=z["end_b"], edge_b=z["edge_b"],
+                          arrival_time=z["arrival_time"],
+                          arrival_cell=z["arrival_cell"],
+                          arrival_user=z["arrival_user"],
+                          step_duration=float(z["step_duration"]),
+                          cloud_servers=float(z["cloud_servers"]),
+                          **kw).validate()
+
+
+class TraceSource:
+    """`ScenarioSource` that replays a recorded `FleetTrace`.
+
+    Frames live on device; ``step`` is a pure gather of frame
+    ``t % horizon`` (the trace wraps), so a ``TraceSource`` drives the
+    same jitted ``lax.scan`` training loops as ``SyntheticSource`` —
+    and ``make_fleet_env_step`` / ``train_against_oracle`` / both
+    agents take it directly. The recorded deployment map (if any) rides
+    on ``FleetScenario.topo``, so shared-edge contention and the
+    coupled oracle apply automatically.
+    """
+
+    state_is_scenario = True
+
+    def __init__(self, trace: FleetTrace):
+        trace.validate()
+        self.trace = trace
+        self._end_b = jnp.asarray(trace.end_b, jnp.int32)
+        self._edge_b = jnp.asarray(trace.edge_b, jnp.int32)
+        self._member = jnp.asarray(trace.member_frames())
+        self._active = jnp.asarray(trace.active_frames())
+        self._topo = trace.topology()
+
+    @classmethod
+    def load(cls, path) -> "TraceSource":
+        return cls(load_trace(path))
+
+    @property
+    def cells(self) -> int:
+        return self.trace.cells
+
+    @property
+    def users(self) -> int:
+        return self.trace.users
+
+    @property
+    def horizon(self) -> int:
+        return self.trace.horizon
+
+    @property
+    def dynamic(self) -> bool:
+        return self.trace.horizon > 1
+
+    def _frame(self, t) -> FleetScenario:
+        i = jnp.mod(t, self.horizon)
+        return FleetScenario(self._end_b[i], self._edge_b[i],
+                             self._member[i], self._active[i],
+                             jnp.int32(t), self._topo)
+
+    def reset(self, key):
+        scen = self._frame(jnp.int32(0))
+        return scen, scen
+
+    def step(self, key, state):
+        scen = self._frame(state.t + 1)
+        return scen, scen
+
+
+def record_trace(source, key, steps: int,
+                 step_duration: float = 1.0) -> FleetTrace:
+    """Run any `ScenarioSource` for ``steps`` steps and record the
+    stream as a `FleetTrace` — synthetic fleets become replayable
+    traces (``TraceSource(record_trace(src, key, n))`` replays the
+    exact scenario frames). Arrival events are emitted mid-bin
+    (``(t + 0.5) * step_duration``) so the timestamp binning
+    round-trips exactly. The FIRST frame's topology is recorded as the
+    deployment map (a mid-trace edge failure is not representable in
+    the static map)."""
+    end_b, edge_b, member, active = [], [], [], []
+    key, k = jax.random.split(key)
+    scen, state = source.reset(k)
+    topo = scen.topo
+    for _ in range(steps):
+        end_b.append(np.asarray(scen.end_b))
+        edge_b.append(np.asarray(scen.edge_b))
+        member.append(np.asarray(scen.member))
+        active.append(np.asarray(scen.active))
+        key, k = jax.random.split(key)
+        scen, state = source.step(k, state)
+    t_idx, c_idx, u_idx = np.nonzero(np.stack(active))
+    return FleetTrace(
+        end_b=np.stack(end_b).astype(np.int32),
+        edge_b=np.stack(edge_b).astype(np.int32),
+        arrival_time=(t_idx + 0.5) * step_duration,
+        arrival_cell=c_idx.astype(np.int32),
+        arrival_user=u_idx.astype(np.int32),
+        step_duration=step_duration,
+        member=np.stack(member),
+        **_deployment_fields(topo),
+    )
+
+
+def _deployment_fields(topo) -> dict:
+    if topo is None:
+        return {}
+    return dict(cell_edge=np.asarray(topo.cell_edge, np.int32),
+                edge_capacity=np.asarray(topo.edge_capacity, np.float32),
+                cloud_servers=float(topo.cloud_servers))
+
+
+def make_env_step(source, threshold: float = 0.0, noise: float = 0.02):
+    """Pure per-step fleet environment transition over any
+    `ScenarioSource` — returns ``env_step(key, scen, per_user) ->
+    (scen2, counts, mean_ms, mean_acc, reward)``, jit/scan friendly.
+    The scenario-source analogue of the legacy
+    ``population.make_fleet_env_step(FleetConfig)`` (which now shims to
+    this)."""
+    from repro.fleet.population import simulate_responses
+    require_scenario_state(source)
+
+    def env_step(key, scen, per_user):
+        k_noise, k_scen = jax.random.split(key)
+        mean_ms, acc, counts = simulate_responses(k_noise, scen, per_user,
+                                                  noise)
+        r = dynamics.reward(mean_ms, acc, threshold, xp=jnp)
+        scen2, _ = source.step(k_scen, scen)
+        return scen2, counts, mean_ms, acc, r
+
+    return env_step
+
+
+# ---------------------------------------------------------------------------
+# FleetPolicy — one policy surface
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class FleetPolicy(Protocol):
+    """One decision surface over every routable thing: the tabular
+    fleet agent, the shared-policy DQN, the brute-force/best-response
+    oracles, and the static baselines. ``decisions`` returns
+    ``((cells, N) per-user action ids, (cells,) joint ids)``;
+    ``expected`` the noise-free ``((cells,) mean ms, mean acc)`` of the
+    policy's greedy decision under nominal load."""
+
+    @property
+    def accuracy_threshold(self) -> float: ...
+
+    def decisions(self, counts, scen: FleetScenario): ...
+
+    def expected(self, scen: Optional[FleetScenario] = None, counts=None): ...
+
+
+class StatelessPolicy:
+    """Shared base of the policies that carry no learned state: the
+    candidate action table (which doubles as the oracle set
+    ``holdout_reward_ratio`` scores against), the QoS threshold, the
+    protocol pad-width guard, and the ``decisions``-derived half of the
+    `FleetPolicy` surface. Subclasses implement ``decisions``."""
+
+    def __init__(self, users: int, actions: Optional[np.ndarray] = None,
+                 threshold: float = 0.0):
+        self.spec = SpaceSpec(users)
+        acts = np.asarray(actions) if actions is not None else \
+            default_actions(self.spec)
+        self.pu_table = jnp.asarray(self.spec.decode_actions_batch(acts))
+        self._threshold = float(threshold)
+
+    @property
+    def accuracy_threshold(self) -> float:
+        return self._threshold
+
+    def _check(self, scen: FleetScenario) -> None:
+        check_pad_width(self.spec.n_users, scen, type(self).__name__)
+
+    def _ids(self, dec) -> jnp.ndarray:
+        return jnp.asarray(self.spec.encode_actions_batch(np.asarray(dec)))
+
+    def decisions(self, counts, scen: FleetScenario):
+        raise NotImplementedError
+
+    def policy_decisions(self, counts, scen: FleetScenario):
+        """FleetOrchestrator's legacy entry point, same contract."""
+        return self.decisions(counts, scen)
+
+    def expected(self, scen: Optional[FleetScenario] = None, counts=None):
+        if scen is None:
+            raise ValueError(f"{type(self).__name__} has no attached "
+                             "scenario; pass scen=")
+        per_user = self.decisions(counts, scen)[0]
+        ms, acc = nominal_expected_response(scen, per_user)
+        return np.asarray(ms), np.asarray(acc)
+
+
+class OraclePolicy(StatelessPolicy):
+    """The per-cell brute force — or, with an attached topology, the
+    coupled best-response oracle — behind the `FleetPolicy` protocol.
+    Stateless w.r.t. job counts (it optimizes the nominal-load expected
+    response over the candidate set), so ``counts`` is ignored."""
+
+    def decisions(self, counts, scen: FleetScenario):
+        self._check(scen)
+        _, idx = fleet_bruteforce(scen, self.pu_table, self._threshold)
+        return self.pu_table[idx], self._ids(self.pu_table[idx])
+
+
+class StaticPolicy(StatelessPolicy):
+    """The paper's fixed strategies (§6.1) as a `FleetPolicy`: every
+    user runs ``'device'`` (local d0), ``'edge'``, or ``'cloud'`` — or
+    any explicit per-user action id."""
+
+    STRATEGIES = {"device": 0, "edge": dynamics.A_EDGE,
+                  "cloud": dynamics.A_CLOUD}
+
+    def __init__(self, users: int, strategy: Union[str, int] = "edge",
+                 threshold: float = 0.0):
+        super().__init__(users, threshold=threshold)
+        self.action = (self.STRATEGIES[strategy]
+                       if isinstance(strategy, str) else int(strategy))
+
+    def decisions(self, counts, scen: FleetScenario):
+        self._check(scen)
+        dec = jnp.full((scen.cells, scen.users), self.action, jnp.int32)
+        return dec, self._ids(dec)
+
+
+# ---------------------------------------------------------------------------
+# route-to-serving
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServedRequest:
+    """One request dispatched through the serving bridge."""
+    cell: int
+    user: int
+    action: int                 # routed per-user action id (0..9)
+    tier: str                   # 'S' | 'E' | 'C'
+    variant: str                # model variant actually served (e.g. 'd2')
+    predicted_ms: float         # latency model's per-user prediction
+    measured_ms: float          # engine batch wall-clock (ms)
+
+
+@dataclasses.dataclass
+class RouteResult:
+    """A routing decision plus its real-serving outcome (paper Table 8:
+    predicted vs measured response, here at fleet scale)."""
+    decisions: jnp.ndarray      # (cells, N) per-user action ids
+    ids: jnp.ndarray            # (cells,) joint action ids
+    served: List[ServedRequest]
+    batches: int                # engine batches drained
+    edge_util: Optional[jnp.ndarray] = None
+
+    @property
+    def predicted_ms(self) -> np.ndarray:
+        return np.asarray([r.predicted_ms for r in self.served])
+
+    @property
+    def measured_ms(self) -> np.ndarray:
+        return np.asarray([r.measured_ms for r in self.served])
+
+    @property
+    def gap_x(self) -> float:
+        """measured / predicted mean-latency ratio (1.0 = the latency
+        model predicts real serving perfectly; the paper's Table-8 gap)."""
+        p = self.predicted_ms
+        return float(self.measured_ms.mean() / max(p.mean(), 1e-9)) \
+            if len(p) else float("nan")
+
+    def summary(self) -> dict:
+        return {"requests": len(self.served), "batches": self.batches,
+                "predicted_mean_ms": float(self.predicted_ms.mean())
+                if self.served else None,
+                "measured_mean_ms": float(self.measured_ms.mean())
+                if self.served else None,
+                "gap_x": self.gap_x}
+
+
+def _tier_variant(a: int, local_variants) -> Tuple[str, str]:
+    """Map a per-user action id to the serving (tier, variant): 0..7 run
+    locally on the nearest available device-tier variant (ladder gaps
+    snap, as in examples/serve_orchestrated.py), 8/9 offload to the
+    edge/cloud d0 (the paper's setting)."""
+    if a == dynamics.A_EDGE:
+        return "E", "d0"
+    if a == dynamics.A_CLOUD:
+        return "C", "d0"
+    if not local_variants:
+        raise KeyError("no device-tier ('S') engines were provided for a "
+                       f"local decision d{a}")
+    v = min(local_variants, key=lambda x: abs(x - a))
+    return "S", f"d{v}"
+
+
+class FleetOrchestrator:
+    """Runtime front door for a fleet: one vectorized greedy pass routes
+    every cell, and — given serving engines — dispatches the routed
+    requests to real batched inference.
+
+    Accepts any `FleetPolicy` (either fleet agent, `OraclePolicy`,
+    `StaticPolicy`, or legacy agents exposing only
+    ``policy_decisions``). ``route()`` keeps the pre-redesign tuple
+    contract; ``route(dispatch=engines)`` returns a `RouteResult` with
+    measured wall-times next to the model's predictions.
+    """
+
+    def __init__(self, policy):
+        self.policy = policy
+
+    @property
+    def agent(self):
+        """Pre-redesign attribute name for the routed policy."""
+        return self.policy
+
+    # ------------------------------------------------------------------
+    def _predicted_per_user_ms(self, dec, scen: FleetScenario):
+        """(cells, N) latency-model predictions for a routed decision
+        under the current request mask (inactive users predict 0)."""
+        if scen.topo is None:
+            return dynamics.response_times(dec, scen.end_b, scen.edge_b,
+                                           active=scen.active, xp=jnp)
+        return topology.topology_response_times(dec, scen.end_b, scen.edge_b,
+                                                scen.topo, active=scen.active,
+                                                xp=jnp)
+
+    def _dispatch(self, dec, scen: FleetScenario, engines,
+                  prompts: Optional[Callable], max_new_tokens: int,
+                  batch_size: int, prompt_len: int, seed: int):
+        from repro.serving import Request, RequestBatcher
+        dec_np = np.asarray(dec)
+        active = np.asarray(scen.active)
+        pred = np.asarray(self._predicted_per_user_ms(dec, scen))
+        local = sorted(int(v[1:]) for v in engines.get("S", {}))
+        any_tier = next(iter(engines.values()), {})
+        any_eng = next(iter(any_tier.values()), None)
+        if any_eng is None:
+            raise ValueError("dispatch= needs a non-empty "
+                             "{tier: {variant: ServingEngine}} dict "
+                             "(see repro.launch.serve.build_engines)")
+        vocab = int(any_eng.model.cfg.vocab_size)
+        rng = np.random.default_rng(seed)
+        batchers, meta = {}, {}
+        for rid, (c, u) in enumerate(zip(*np.nonzero(active))):
+            a = int(dec_np[c, u])
+            tier, variant = _tier_variant(a, local)
+            if tier not in engines or variant not in engines[tier]:
+                raise KeyError(
+                    f"no engine for tier {tier!r} variant {variant!r}; "
+                    "build_engines(...) must cover the routed decisions")
+            p = (np.asarray(prompts(int(c), int(u)), np.int32)
+                 if prompts is not None
+                 else rng.integers(0, vocab, prompt_len).astype(np.int32))
+            meta[rid] = (int(c), int(u), a, tier, variant)
+            batchers.setdefault((tier, variant),
+                                RequestBatcher(batch_size)).submit(
+                Request(rid, p, max_new_tokens=max_new_tokens, user=int(u)))
+        served, batches = [], 0
+        for (tier, variant), batcher in batchers.items():
+            eng = engines[tier][variant]
+            while True:
+                done = eng.serve(batcher)
+                if not done:
+                    break
+                batches += 1
+                for r in done:
+                    c, u, a, t_, v_ = meta[r.rid]
+                    served.append(ServedRequest(
+                        c, u, a, t_, v_, float(pred[c, u]),
+                        float(r.response_time * 1e3)))
+        served.sort(key=lambda s: (s.cell, s.user))
+        return served, batches
+
+    # ------------------------------------------------------------------
+    def route(self, scen: Optional[FleetScenario] = None,
+              counts: Optional[jnp.ndarray] = None,
+              with_edge_util: bool = False, dispatch=None,
+              prompts: Optional[Callable] = None, max_new_tokens: int = 4,
+              batch_size: int = 8, prompt_len: int = 12, seed: int = 0):
+        """Route the whole fleet in one greedy pass.
+
+        Without ``dispatch`` this is the pre-redesign contract:
+        ``(decisions, ids)`` — plus ``(n_edges,)`` utilization with
+        ``with_edge_util=True``. A held-out ``scen`` without ``counts``
+        is routed cold (zero job counts); pad-width / cell-count
+        mismatches raise the shared protocol error for every policy.
+
+        ``dispatch={tier: {variant: ServingEngine}}`` drains the routed
+        decisions of every ACTIVE user into the engines through
+        per-(tier, variant) ``RequestBatcher``s and returns a
+        `RouteResult`: measured batch wall-times next to the latency
+        model's per-user predictions (``prompts(cell, user) -> int32
+        tokens`` overrides the synthetic prompts).
+        """
+        policy = self.policy
+        if scen is None:
+            scen = getattr(policy, "scen", None)
+            if scen is None:
+                raise ValueError(
+                    f"{type(policy).__name__} has no attached scenario; "
+                    "pass scen=")
+            if counts is None:
+                counts = getattr(policy, "counts", None)
+        if counts is None:
+            counts = jnp.zeros((scen.cells, 2), jnp.int32)
+        decide = getattr(policy, "decisions", None) or policy.policy_decisions
+        dec, ids = decide(counts, scen)
+        util = None
+        if with_edge_util:
+            topo = (scen.topo if scen.topo is not None
+                    else topology.identity_topology(scen.cells))
+            util = topology.edge_utilization(dec, topo, active=scen.active)
+        if dispatch is not None:
+            served, batches = self._dispatch(dec, scen, dispatch, prompts,
+                                             max_new_tokens, batch_size,
+                                             prompt_len, seed)
+            return RouteResult(decisions=dec, ids=ids, served=served,
+                               batches=batches, edge_util=util)
+        if with_edge_util:
+            return dec, ids, util
+        return dec, ids

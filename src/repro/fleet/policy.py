@@ -74,12 +74,13 @@ from repro.core.networks import make_factored_q, mlp_apply, mlp_init
 from repro.core.spaces import (N_PER_USER_ACTIONS, SpaceSpec,
                                allowed_per_user)
 from repro.fleet import dynamics
-from repro.fleet.population import (FleetTrainResult, default_actions,
-                                    fleet_bruteforce,
+from repro.fleet.population import (FleetTrainResult, check_pad_width,
+                                    default_actions, fleet_bruteforce,
                                     nominal_expected_response,
-                                    simulate_responses, train_against_oracle)
+                                    resolve_source, simulate_responses,
+                                    train_against_oracle)
 from repro.fleet.replay import replay_init, replay_push, replay_sample
-from repro.fleet.scenarios import FleetConfig, FleetScenario, step_fleet
+from repro.fleet.scenarios import FleetConfig, FleetScenario
 from repro.training.optimizer import (apply_updates, constant_lr_adamw,
                                       init_opt_state)
 
@@ -197,7 +198,9 @@ def holdout_reward_ratio(agent, scen: FleetScenario,
     acceptance test, ``benchmarks/bench_fleet_dqn.py``, and the
     quickstart example so the floor/feasibility convention can't drift."""
     th = agent.accuracy_threshold if threshold is None else threshold
-    g_ms, g_acc = agent.greedy_expected(scen=scen)
+    expected = getattr(agent, "expected", None)       # FleetPolicy protocol
+    g_ms, g_acc = (expected(scen) if expected is not None
+                   else agent.greedy_expected(scen=scen))
     feas = np.asarray(dynamics.feasible(g_acc, th))
     opt_ms = np.asarray(fleet_bruteforce(scen, agent.pu_table, th)[0])
     achieved = np.where(feas, -g_ms, -dynamics.MAX_RESPONSE_MS)
@@ -237,11 +240,17 @@ class FleetDQN:
     restricts both to that candidate set.
     """
 
-    def __init__(self, scen: FleetScenario, fleet_cfg: FleetConfig,
+    def __init__(self, scen, fleet_cfg: Optional[FleetConfig] = None,
                  cfg: Optional[FleetDQNConfig] = None,
-                 actions: Optional[np.ndarray] = None, seed: int = 0):
+                 actions: Optional[np.ndarray] = None, seed: int = 0,
+                 reset_key=None):
+        """``scen`` is a ``repro.fleet.api.ScenarioSource`` (reset with
+        ``reset_key``, default ``PRNGKey(seed)``) — or, equivalently, a
+        ``FleetScenario`` plus its ``FleetConfig`` (wrapped into a
+        ``SyntheticSource`` pinned to that scenario)."""
         self.cfg = cfg or FleetDQNConfig()
-        self.fleet_cfg = fleet_cfg
+        scen, self.source = resolve_source(scen, fleet_cfg, seed, reset_key)
+        self.fleet_cfg = getattr(self.source, "cfg", None)
         self.spec = SpaceSpec(scen.users)
         users = scen.users
         if actions is None:
@@ -387,7 +396,8 @@ class FleetDQN:
         return train_step
 
     def _make_step(self, act):
-        cfg, fleet_cfg = self.cfg, self.fleet_cfg
+        cfg = self.cfg
+        advance = self.source.step          # jit-pure ScenarioSource step
         train_step = self._make_train_step()
 
         def step(params, opt, buf, counts, scen, eps, key):
@@ -399,7 +409,7 @@ class FleetDQN:
             # regression target: summed (not mean) response, no floor —
             # size-invariant per-user values; see module docstring
             r_train = -(mean_ms * scen.active.sum(-1)) / 1000.0
-            scen2 = step_fleet(k_scen, scen, fleet_cfg)
+            scen2, _ = advance(k_scen, scen)
             s2 = encode_fleet_state(counts2, scen2)
             buf = replay_push(buf, s, a, r_train, s2)
             bs, ba, br, bs2 = replay_sample(k_samp, buf, cfg.batch_size)
@@ -464,14 +474,10 @@ class FleetDQN:
         """The feature layout (and the 'cell' net's input width) is tied
         to the trained padded width: a wider scen would silently misread
         every feature block, a narrower one crashes cryptically — catch
-        both up front. Smaller CELLS are fine (the membership mask);
-        only the padding width is pinned."""
-        if scen.users != self.spec.n_users:
-            raise ValueError(
-                f"FleetDQN encodes fleets padded to {self.spec.n_users} "
-                f"users; got a {scen.users}-wide scenario — regenerate it "
-                f"with users={self.spec.n_users} (smaller cells are "
-                "expressed via the membership mask, not a narrower pad)")
+        both up front through the protocol-shared guard. Smaller CELLS
+        are fine (the membership mask); only the padding width is
+        pinned."""
+        check_pad_width(self.spec.n_users, scen, "FleetDQN")
 
     def policy_decisions(self, counts, scen):
         """(cells, N) per-user decisions + (cells,) joint action ids from
@@ -485,19 +491,31 @@ class FleetDQN:
         or, given a (possibly held-out) ``scen``, cold-start decisions
         for cells the policy has never trained on."""
         if scen is None:
-            scen, counts = self.scen, self.counts
+            scen = self.scen
+            if counts is None:
+                counts = self.counts
         self._check_width(scen)
         if counts is None:
             counts = jnp.zeros((scen.cells, 2), jnp.int32)
         return self._greedy(self.params, counts, scen)[0]
 
-    def greedy_expected(self, scen: Optional[FleetScenario] = None):
+    def greedy_expected(self, scen: Optional[FleetScenario] = None,
+                        counts=None):
         """Noise-free (mean ms, mean acc) of each cell's greedy decision;
         pass a held-out ``scen`` to score cross-cell generalization."""
         eval_scen = scen if scen is not None else self.scen
-        per_user = self.greedy_decisions(scen=scen)
+        per_user = self.greedy_decisions(scen=scen, counts=counts)
         ms, acc = nominal_expected_response(eval_scen, per_user)
         return np.asarray(ms), np.asarray(acc)
+
+    # ------------------------------------------------ FleetPolicy protocol
+    def decisions(self, counts, scen: FleetScenario):
+        """``api.FleetPolicy`` surface (alias of ``policy_decisions``)."""
+        return self.policy_decisions(counts, scen)
+
+    def expected(self, scen: Optional[FleetScenario] = None, counts=None):
+        """``api.FleetPolicy`` surface (alias of ``greedy_expected``)."""
+        return self.greedy_expected(scen=scen, counts=counts)
 
     def train(self, max_steps: int, check_every: int = 200,
               tol: float = 0.01, patience: int = 3) -> FleetTrainResult:

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -36,7 +37,44 @@ import numpy as np
 
 from repro.core.spaces import SpaceSpec, restricted_actions
 from repro.fleet import dynamics, topology
-from repro.fleet.scenarios import FleetConfig, FleetScenario, step_fleet
+from repro.fleet.scenarios import FleetConfig, FleetScenario
+
+
+def check_pad_width(n_users: int, scen: FleetScenario, who: str) -> None:
+    """THE pad-width guard of the FleetPolicy protocol, shared by every
+    policy (both agents, the oracle, the static baselines): a scenario
+    padded to a different user width than the policy was built for —
+    e.g. one produced by a ``TraceSource`` recorded at another width —
+    must raise the same clear error everywhere instead of silently
+    misreading feature blocks or state indices."""
+    if scen.users != n_users:
+        raise ValueError(
+            f"{who} routes fleets padded to {n_users} users; got a "
+            f"{scen.users}-wide scenario — regenerate it with "
+            f"users={n_users} (smaller cells are expressed via the "
+            "membership mask, not a narrower pad)")
+
+
+def resolve_source(scen, fleet_cfg, seed: int, reset_key=None):
+    """Normalize an agent's scenario arguments onto the ScenarioSource
+    seam: a source resets into its initial scenario; the legacy
+    ``(FleetScenario, FleetConfig)`` pair wraps bit-exactly into a
+    ``SyntheticSource`` pinned to that scenario. Returns
+    ``(scen0, source)``."""
+    from repro.fleet.api import SyntheticSource, is_source, \
+        require_scenario_state
+    if is_source(scen):
+        source = scen
+        require_scenario_state(source)
+        key = reset_key if reset_key is not None else \
+            jax.random.PRNGKey(seed)
+        scen0, _ = source.reset(key)
+        return scen0, source
+    if fleet_cfg is None:
+        raise TypeError(
+            "pass a ScenarioSource (repro.fleet.api), or a FleetScenario "
+            "together with its FleetConfig")
+    return scen, SyntheticSource(fleet_cfg, scen=scen)
 
 
 def simulate_responses(key, scen: FleetScenario, per_user, noise: float):
@@ -86,24 +124,29 @@ def nominal_expected_response(scen: FleetScenario, per_user):
         per_user, scen.end_b, scen.edge_b, scen.topo, scen.member)
 
 
-def make_fleet_env_step(fleet_cfg: FleetConfig, threshold: float = 0.0,
+def make_fleet_env_step(fleet_cfg, threshold: float = 0.0,
                         noise: float = 0.02):
     """Pure per-step fleet environment transition — the fleet analogue of
     ``EndEdgeCloudEnv.step`` with the decision supplied externally.
 
-    Returns ``env_step(key, scen, per_user) -> (scen2, counts2, mean_ms,
-    mean_acc, reward)``; wrap in ``jax.jit`` / ``lax.scan`` to step every
-    cell of the fleet per call.
-    """
-    def env_step(key, scen, per_user):
-        k_noise, k_scen = jax.random.split(key)
-        mean_ms, acc, counts = simulate_responses(k_noise, scen, per_user,
-                                                  noise)
-        r = dynamics.reward(mean_ms, acc, threshold, xp=jnp)
-        scen2 = step_fleet(k_scen, scen, fleet_cfg)
-        return scen2, counts, mean_ms, acc, r
+    Takes any ``repro.fleet.api.ScenarioSource`` (``SyntheticSource``,
+    ``TraceSource``, ...). Returns ``env_step(key, scen, per_user) ->
+    (scen2, counts2, mean_ms, mean_acc, reward)``; wrap in ``jax.jit`` /
+    ``lax.scan`` to step every cell of the fleet per call.
 
-    return env_step
+    Passing a raw ``FleetConfig`` is deprecated (it wraps into a
+    ``SyntheticSource`` with identical results — same generators, same
+    key usage — but new code should construct the source explicitly).
+    """
+    from repro.fleet.api import SyntheticSource, make_env_step
+    if isinstance(fleet_cfg, FleetConfig):
+        warnings.warn(
+            "make_fleet_env_step(FleetConfig) is deprecated; pass a "
+            "ScenarioSource instead, e.g. "
+            "repro.fleet.api.SyntheticSource(cfg)",
+            DeprecationWarning, stacklevel=2)
+        fleet_cfg = SyntheticSource(fleet_cfg)
+    return make_env_step(fleet_cfg, threshold=threshold, noise=noise)
 
 
 def default_actions(spec: SpaceSpec) -> np.ndarray:
@@ -134,11 +177,17 @@ class FleetQLearning:
     transition, and TD update, all inside a single jitted call.
     """
 
-    def __init__(self, scen: FleetScenario, fleet_cfg: FleetConfig,
+    def __init__(self, scen, fleet_cfg: Optional[FleetConfig] = None,
                  cfg: Optional[FleetQConfig] = None,
-                 actions: Optional[np.ndarray] = None, seed: int = 0):
+                 actions: Optional[np.ndarray] = None, seed: int = 0,
+                 reset_key=None):
+        """``scen`` is a ``repro.fleet.api.ScenarioSource`` (reset with
+        ``reset_key``, default ``PRNGKey(seed)``) — or, equivalently, a
+        ``FleetScenario`` plus its ``FleetConfig`` (wrapped into a
+        ``SyntheticSource`` pinned to that scenario)."""
         self.cfg = cfg or FleetQConfig()
-        self.fleet_cfg = fleet_cfg
+        scen, self.source = resolve_source(scen, fleet_cfg, seed, reset_key)
+        self.fleet_cfg = getattr(self.source, "cfg", None)
         self.spec = SpaceSpec(scen.users)
         self.actions = np.asarray(actions if actions is not None
                                   else default_actions(self.spec))
@@ -174,7 +223,8 @@ class FleetQLearning:
         return s
 
     def _make_step(self):
-        cfg, fleet_cfg, pu = self.cfg, self.fleet_cfg, self.pu_table
+        cfg, pu = self.cfg, self.pu_table
+        advance = self.source.step          # jit-pure ScenarioSource step
         n_actions = self.n_actions
 
         def step(q, counts, scen, eps, key):
@@ -197,7 +247,7 @@ class FleetQLearning:
             r = dynamics.reward(mean_ms, acc, cfg.accuracy_threshold,
                                 xp=jnp)
             # exogenous transition + TD update against the next state
-            scen2 = step_fleet(k_scen, scen, fleet_cfg)
+            scen2, _ = advance(k_scen, scen)
             s2 = self._state_index(counts2, scen2)
             td = r + cfg.gamma * q[cells, s2].max(-1) - q[cells, s, a]
             q = q.at[cells, s, a].add(cfg.alpha * td)
@@ -277,11 +327,7 @@ class FleetQLearning:
         the shared-policy DQN this agent cannot serve a held-out fleet —
         ``scen`` may vary link/membership state but must have this
         agent's cells."""
-        if scen.users != self.spec.n_users:
-            raise ValueError(
-                f"FleetQLearning indexes states for fleets padded to "
-                f"{self.spec.n_users} users; got a {scen.users}-wide "
-                "scenario")
+        check_pad_width(self.spec.n_users, scen, "FleetQLearning")
         if scen.cells != self.q.shape[0]:
             raise ValueError(
                 f"FleetQLearning holds one Q-table per trained cell "
@@ -313,6 +359,15 @@ class FleetQLearning:
         ms, acc = nominal_expected_response(eval_scen, per_user)
         return np.asarray(ms), np.asarray(acc)
 
+    # ------------------------------------------------ FleetPolicy protocol
+    def decisions(self, counts, scen: FleetScenario):
+        """``api.FleetPolicy`` surface (alias of ``policy_decisions``)."""
+        return self.policy_decisions(counts, scen)
+
+    def expected(self, scen: Optional[FleetScenario] = None, counts=None):
+        """``api.FleetPolicy`` surface (alias of ``greedy_expected``)."""
+        return self.greedy_expected(scen=scen, counts=counts)
+
 
 def train_against_oracle(agent, max_steps: int, check_every: int = 200,
                          tol: float = 0.01,
@@ -324,13 +379,20 @@ def train_against_oracle(agent, max_steps: int, check_every: int = 200,
     response within ``tol`` of that cell's brute-force optimum for
     ``patience`` consecutive checks (fleet analogue of ``train_agent``).
 
-    For dynamic fleets (Markov links / churn) the scenario — and so the
-    optimum — moves between checks; the oracle is then recomputed per
-    check, and "converged" means tracking the current optimum."""
-    fc = agent.fleet_cfg
+    For dynamic fleets (Markov links / churn / trace replay) the
+    scenario — and so the optimum — moves between checks; the oracle is
+    then recomputed per check, and "converged" means tracking the
+    current optimum. Whether the fleet is dynamic comes from the
+    agent's ``ScenarioSource`` (``source.dynamic``); agents built
+    outside the source seam fall back to their ``fleet_cfg``."""
     threshold = agent.accuracy_threshold
-    dynamic = bool(fc.p_r2w or fc.p_w2r or fc.p_join or fc.p_leave
-                   or fc.p_edge_fail)
+    source = getattr(agent, "source", None)
+    if source is not None:
+        dynamic = bool(source.dynamic)
+    else:
+        fc = agent.fleet_cfg
+        dynamic = bool(fc.p_r2w or fc.p_w2r or fc.p_join or fc.p_leave
+                       or fc.p_edge_fail)
     opt_ms = None                        # dynamic: computed per check instead
     if not dynamic:
         opt_ms = np.asarray(fleet_bruteforce(
@@ -555,39 +617,16 @@ def topology_bruteforce(scen: FleetScenario, pu_table: jnp.ndarray,
 
 
 class FleetOrchestrator:
-    """Runtime policy head for a fleet: routes the decisions of every
-    cell from ONE vectorized greedy pass (the fleet analogue of
-    ``core.orchestrator.IntelligentOrchestrator``). Accepts any agent
-    exposing ``policy_decisions(counts, scen)`` — the batched tabular
-    ``FleetQLearning`` or the shared-policy ``fleet.policy.FleetDQN``."""
+    """Deprecated import path: the fleet orchestrator moved to
+    ``repro.fleet.api`` (where ``route`` grew the ``dispatch=engines``
+    serving bridge). This shim constructs the real thing — identical
+    behavior — and will be removed next release."""
 
-    def __init__(self, agent):
-        self.agent = agent
-
-    def route(self, scen: Optional[FleetScenario] = None,
-              counts: Optional[jnp.ndarray] = None,
-              with_edge_util: bool = False):
-        """(cells, N) per-user tier/model decisions + (cells,) action ids
-        for the whole fleet, in one jitted greedy pass. A held-out
-        ``scen`` without ``counts`` is routed cold (zero job counts);
-        routing a fleet the agent never trained on needs a policy that
-        transfers — ``fleet.policy.FleetDQN`` (the tabular agent raises
-        on a cell-count mismatch).
-
-        ``with_edge_util=True`` appends the (n_edges,) per-edge
-        utilization this decision induces over the currently active
-        users (jobs per unit of edge capacity; an isolated fleet reports
-        per-cell loads via the 1:1 identity topology)."""
-        if scen is None:
-            scen = self.agent.scen
-            if counts is None:
-                counts = self.agent.counts
-        elif counts is None:
-            counts = jnp.zeros((scen.cells, 2), jnp.int32)
-        dec, ids = self.agent.policy_decisions(counts, scen)
-        if not with_edge_util:
-            return dec, ids
-        topo = (scen.topo if scen.topo is not None
-                else topology.identity_topology(scen.cells))
-        util = topology.edge_utilization(dec, topo, active=scen.active)
-        return dec, ids, util
+    def __new__(cls, agent):
+        from repro.fleet.api import FleetOrchestrator as _FleetOrchestrator
+        warnings.warn(
+            "repro.fleet.population.FleetOrchestrator has moved to "
+            "repro.fleet.api — import FleetOrchestrator from repro.fleet "
+            "(this shim will be removed next release)",
+            DeprecationWarning, stacklevel=2)
+        return _FleetOrchestrator(agent)

@@ -26,6 +26,12 @@ pure, seedable, jit-compatible generators over ``(cells, users)`` arrays:
 `FleetScenario` composes all of the above behind `init_fleet` /
 `step_fleet`; `table5_fleet` replicates any paper scenario across a
 fleet for parity testing against the scalar environment.
+
+These generators are one implementation of the front door's
+`repro.fleet.api.ScenarioSource` seam (`SyntheticSource` wraps them
+bit-exactly); recorded request traces are the other
+(`api.TraceSource`, whose timestamp binning lives here as
+`arrivals_from_timestamps`).
 """
 from __future__ import annotations
 
@@ -81,6 +87,29 @@ def poisson_active(key, shape, rate):
     >=1 request, i.e. w.p. ``1 - exp(-rate)`` (Poisson thinning)."""
     p = 1.0 - jnp.exp(-jnp.asarray(rate))
     return jax.random.bernoulli(key, p, shape)
+
+
+def arrivals_from_timestamps(times, cells_idx, users_idx, horizon: int,
+                             cells: int, users: int,
+                             step_duration: float = 1.0) -> np.ndarray:
+    """Bin recorded request timestamps into per-step activity masks.
+
+    Event e (``times[e]`` seconds, issued by ``(cells_idx[e],
+    users_idx[e])``) lands in fleet step ``floor(times[e] /
+    step_duration)``; events outside ``[0, horizon)`` are dropped.
+    Returns a ``(horizon, cells, users)`` bool array — True iff the
+    user issued >= 1 request that step (the recorded-trace analogue of
+    ``poisson_active``). Host-side numpy: traces are preprocessed once
+    at load, not inside jitted steps."""
+    out = np.zeros((horizon, cells, users), bool)
+    if len(np.asarray(times)) == 0:
+        return out
+    t = np.floor(np.asarray(times, np.float64)
+                 / float(step_duration)).astype(np.int64)
+    keep = (t >= 0) & (t < horizon)
+    out[t[keep], np.asarray(cells_idx)[keep], np.asarray(users_idx)[keep]] \
+        = True
+    return out
 
 
 def step_churn(key, member, p_join: float = 0.02, p_leave: float = 0.02):

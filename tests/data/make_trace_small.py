@@ -1,0 +1,76 @@
+"""Generator for the golden trace fixture ``tests/data/trace_small.npz``.
+
+A small but fully-featured recorded trace: 6 cells x 3 users over 12
+steps, with a Markov-ish link-quality series, Poisson arrival
+timestamps (plus a guaranteed t=0 request per cell so frame 0 always
+has traffic), a partially-filled membership mask, and a 2-PoP
+deployment map with mixed capacity tiers and a finite cloud queue.
+
+Regenerate (bit-identical — everything flows from one seeded
+``default_rng``) with:
+
+  PYTHONPATH=src python tests/data/make_trace_small.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+import numpy as np
+
+from repro.fleet.api import FleetTrace, save_trace
+
+CELLS, USERS, HORIZON = 6, 3, 12
+STEP_DURATION = 0.5                      # seconds binned into one step
+PATH = os.path.join(os.path.dirname(__file__), "trace_small.npz")
+
+
+def build_trace(seed: int = 7) -> FleetTrace:
+    rng = np.random.default_rng(seed)
+    # link-quality series: start biased-Regular, flip sparsely per step
+    end_b = np.zeros((HORIZON, CELLS, USERS), np.int32)
+    edge_b = np.zeros((HORIZON, CELLS), np.int32)
+    end_b[0] = rng.random((CELLS, USERS)) < 0.3
+    edge_b[0] = rng.random(CELLS) < 0.3
+    for t in range(1, HORIZON):
+        end_b[t] = np.where(rng.random((CELLS, USERS)) < 0.15,
+                            1 - end_b[t - 1], end_b[t - 1])
+        edge_b[t] = np.where(rng.random(CELLS) < 0.15,
+                             1 - edge_b[t - 1], edge_b[t - 1])
+    # membership: cells have 2-3 of the 3 padded slots (prefix mask)
+    sizes = rng.integers(2, USERS + 1, CELLS)
+    member = np.arange(USERS)[None, :] < sizes[:, None]
+    # Poisson arrival timestamps per (cell, member user), rate ~2/s,
+    # plus one t=0 event for user 0 of every cell
+    times, ev_cell, ev_user = [], [], []
+    for c in range(CELLS):
+        times.append(0.0)
+        ev_cell.append(c)
+        ev_user.append(0)
+        for u in range(int(sizes[c])):
+            t = rng.exponential(0.5)
+            while t < HORIZON * STEP_DURATION:
+                times.append(t)
+                ev_cell.append(c)
+                ev_user.append(u)
+                t += rng.exponential(0.5)
+    order = np.argsort(np.asarray(times), kind="stable")
+    return FleetTrace(
+        end_b=end_b, edge_b=edge_b,
+        arrival_time=np.asarray(times, np.float64)[order],
+        arrival_cell=np.asarray(ev_cell, np.int32)[order],
+        arrival_user=np.asarray(ev_user, np.int32)[order],
+        step_duration=STEP_DURATION,
+        member=member,
+        # deployment map: cells 0-3 share hot PoP 0 (double capacity),
+        # cells 4-5 sit on PoP 1; the cloud queues at 6 concurrent jobs
+        cell_edge=np.asarray([0, 0, 0, 0, 1, 1], np.int32),
+        edge_capacity=np.asarray([2.0, 1.0], np.float32),
+        cloud_servers=6.0,
+    ).validate()
+
+
+if __name__ == "__main__":
+    save_trace(PATH, build_trace())
+    print(f"wrote {PATH}")

@@ -1,0 +1,358 @@
+"""repro.fleet.api — the redesigned fleet front door (ISSUE-4).
+
+Covers: SyntheticSource bit-exactness against the pre-redesign
+generator streams, the recorded-trace format (golden fixture
+round-trip), TraceSource replay into the jitted training loops, the
+FleetPolicy protocol (agents + oracle + static baselines behind one
+surface), the shared pad-width protocol error, the deprecation shims,
+and the end-to-end acceptance path: train on a trace, route through
+FleetOrchestrator, dispatch to a real ServingEngine with measured
+wall-time next to the model's prediction."""
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fleet import (FleetConfig, FleetOrchestrator, FleetQConfig,
+                         FleetQLearning, dynamics, fleet_bruteforce,
+                         holdout_reward_ratio, init_fleet,
+                         make_fleet_env_step, mixed_table5_fleet,
+                         nominal_expected_response, step_fleet)
+from repro.fleet.api import (FleetTrace, OraclePolicy, RouteResult,
+                             ScenarioSource, StaticPolicy, SyntheticSource,
+                             TraceSource, load_trace, make_env_step,
+                             record_trace, save_trace)
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+FIXTURE = os.path.join(DATA, "trace_small.npz")
+
+
+def _assert_scen_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.end_b), np.asarray(b.end_b))
+    np.testing.assert_array_equal(np.asarray(a.edge_b), np.asarray(b.edge_b))
+    np.testing.assert_array_equal(np.asarray(a.member), np.asarray(b.member))
+    np.testing.assert_array_equal(np.asarray(a.active), np.asarray(b.active))
+
+
+# ----------------------------------------------------- SyntheticSource ----
+def test_synthetic_source_reproduces_generator_streams_bit_exactly():
+    """Acceptance: SyntheticSource.reset/step ARE init_fleet/step_fleet
+    under the same keys — the pre-redesign random streams, bit for bit,
+    over a fully dynamic config."""
+    cfg = FleetConfig(cells=24, users=4, p_r2w=0.1, p_w2r=0.2,
+                      arrival_rate=0.9, diurnal_period=50, p_join=0.05,
+                      p_leave=0.05, min_users=1, max_users=4, n_edges=3,
+                      p_edge_fail=0.2, cloud_servers=8.0)
+    src = SyntheticSource(cfg)
+    assert isinstance(src, ScenarioSource) and src.dynamic
+    key = jax.random.PRNGKey(11)
+    old = init_fleet(key, cfg)
+    new, state = src.reset(key)
+    _assert_scen_equal(old, new)
+    for i in range(5):
+        k = jax.random.PRNGKey(100 + i)
+        old = step_fleet(k, old, cfg)
+        new, state = src.step(k, state)
+        _assert_scen_equal(old, new)
+        np.testing.assert_array_equal(np.asarray(old.topo.cell_edge),
+                                      np.asarray(new.topo.cell_edge))
+
+
+def test_synthetic_source_pins_an_explicit_scenario():
+    """SyntheticSource(cfg, scen=...) resets to exactly that scenario —
+    the legacy (scen, FleetConfig) agent constructor, as a source."""
+    scen = mixed_table5_fleet(jax.random.PRNGKey(2), 8, 2)
+    src = SyntheticSource(FleetConfig(cells=8, users=2), scen=scen)
+    got, _ = src.reset(jax.random.PRNGKey(999))   # key must not matter
+    assert got is scen
+    assert src.cells == 8 and src.users == 2 and not src.dynamic
+
+
+# ------------------------------------------------------ trace format ------
+def _load_generator():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "make_trace_small", os.path.join(DATA, "make_trace_small.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_golden_trace_fixture_matches_generator():
+    """The committed fixture is exactly what the generator script
+    produces (regenerating it is always safe)."""
+    want = _load_generator().build_trace()
+    got = load_trace(FIXTURE)
+    for f in ("end_b", "edge_b", "arrival_time", "arrival_cell",
+              "arrival_user", "member", "cell_edge", "edge_capacity"):
+        np.testing.assert_array_equal(getattr(got, f), getattr(want, f), f)
+    assert got.step_duration == want.step_duration
+    assert got.cloud_servers == want.cloud_servers
+
+
+def test_trace_save_load_roundtrip(tmp_path):
+    tr = load_trace(FIXTURE)
+    p = tmp_path / "t.npz"
+    save_trace(p, tr)
+    back = load_trace(p)
+    np.testing.assert_array_equal(back.end_b, tr.end_b)
+    np.testing.assert_array_equal(back.arrival_time, tr.arrival_time)
+    np.testing.assert_array_equal(back.cell_edge, tr.cell_edge)
+    assert back.step_duration == tr.step_duration
+    # optional fields stay optional
+    bare = FleetTrace(end_b=tr.end_b, edge_b=tr.edge_b,
+                      arrival_time=tr.arrival_time,
+                      arrival_cell=tr.arrival_cell,
+                      arrival_user=tr.arrival_user)
+    save_trace(tmp_path / "b.npz", bare)
+    back2 = load_trace(tmp_path / "b.npz")
+    assert back2.member is None and back2.cell_edge is None
+    assert np.isinf(back2.cloud_servers)
+
+
+def test_trace_validate_rejects_inconsistent_shapes():
+    tr = load_trace(FIXTURE)
+    with pytest.raises(ValueError, match="edge_b shape"):
+        FleetTrace(end_b=tr.end_b, edge_b=tr.edge_b[:, :3],
+                   arrival_time=tr.arrival_time,
+                   arrival_cell=tr.arrival_cell,
+                   arrival_user=tr.arrival_user).validate()
+    with pytest.raises(ValueError, match="cell_edge shape"):
+        FleetTrace(end_b=tr.end_b, edge_b=tr.edge_b,
+                   arrival_time=tr.arrival_time,
+                   arrival_cell=tr.arrival_cell,
+                   arrival_user=tr.arrival_user,
+                   cell_edge=np.zeros(2, np.int32)).validate()
+    # out-of-range events must fail loudly: a negative cell index would
+    # silently wrap to the LAST cell and train on wrong data
+    for cell, user in ((-1, 0), (tr.cells, 0), (0, -1), (0, tr.users)):
+        with pytest.raises(ValueError, match="out of range"):
+            FleetTrace(end_b=tr.end_b, edge_b=tr.edge_b,
+                       arrival_time=np.asarray([0.0]),
+                       arrival_cell=np.asarray([cell], np.int32),
+                       arrival_user=np.asarray([user], np.int32)).validate()
+
+
+def test_trace_source_stream_matches_recorded_arrays_exactly():
+    """Satellite: write trace -> TraceSource -> the FleetScenario stream
+    equals the recorded arrays exactly, including the wrap past the
+    horizon and the deployment map on ``scen.topo``."""
+    tr = load_trace(FIXTURE)
+    src = TraceSource(tr)
+    active = tr.active_frames()
+    member = tr.member_frames()
+    scen, state = src.reset(jax.random.PRNGKey(0))
+    for t in range(2 * tr.horizon):                      # includes wrap
+        f = t % tr.horizon
+        np.testing.assert_array_equal(np.asarray(scen.end_b), tr.end_b[f])
+        np.testing.assert_array_equal(np.asarray(scen.edge_b), tr.edge_b[f])
+        np.testing.assert_array_equal(np.asarray(scen.member), member[f])
+        np.testing.assert_array_equal(np.asarray(scen.active), active[f])
+        assert int(scen.t) == t
+        np.testing.assert_array_equal(np.asarray(scen.topo.cell_edge),
+                                      tr.cell_edge)
+        np.testing.assert_array_equal(np.asarray(scen.topo.edge_capacity),
+                                      tr.edge_capacity)
+        scen, state = src.step(jax.random.PRNGKey(t), state)
+
+
+def test_record_trace_replays_a_synthetic_stream():
+    """record_trace captures any source's stream; TraceSource replays
+    the exact frames (synthetic fleets become shareable traces)."""
+    cfg = FleetConfig(cells=6, users=2, p_r2w=0.2, p_w2r=0.2,
+                      arrival_rate=1.0, p_join=0.05, p_leave=0.05)
+    src = SyntheticSource(cfg)
+    key = jax.random.PRNGKey(5)
+    tr = record_trace(src, key, 7)
+    assert tr.horizon == 7 and tr.cells == 6 and tr.users == 2
+    # replay == the recorded frames
+    rep = TraceSource(tr)
+    scen, state = rep.reset(jax.random.PRNGKey(0))
+    for t in range(7):
+        np.testing.assert_array_equal(np.asarray(scen.end_b), tr.end_b[t])
+        np.testing.assert_array_equal(np.asarray(scen.active),
+                                      tr.active_frames()[t])
+        scen, state = rep.step(jax.random.PRNGKey(0), state)
+
+
+def test_trace_source_env_step_runs_under_jit_scan():
+    """A TraceSource slots straight into make_fleet_env_step (the new,
+    un-deprecated source path) and steps inside one jitted lax.scan."""
+    src = TraceSource.load(FIXTURE)
+    env_step = make_fleet_env_step(src, threshold=85.0, noise=0.0)
+    scen, _ = src.reset(jax.random.PRNGKey(0))
+    pu = jnp.zeros((src.cells, src.users), jnp.int32)
+
+    def body(carry, k):
+        scen, _ = carry
+        scen2, counts, ms, acc, r = env_step(k, scen, pu)
+        return (scen2, counts), (ms, r)
+
+    keys = jax.random.split(jax.random.PRNGKey(1), 2 * src.horizon)
+    (scen_f, _), (ms, r) = jax.lax.scan(
+        body, (scen, jnp.zeros((src.cells, 2), jnp.int32)), keys)
+    assert int(scen_f.t) == 2 * src.horizon
+    assert np.isfinite(np.asarray(ms)).all()
+    # frames repeat after one horizon: deterministic replay, noise-free
+    np.testing.assert_allclose(np.asarray(ms)[0], np.asarray(ms)[src.horizon],
+                               rtol=1e-6)
+
+
+# --------------------------------------------------- FleetPolicy protocol -
+def test_oracle_policy_routes_at_the_bruteforce_optimum():
+    scen = mixed_table5_fleet(jax.random.PRNGKey(3), 12, 2)
+    pol = OraclePolicy(2, threshold=85.0)
+    dec, ids = FleetOrchestrator(pol).route(scen=scen)
+    _, want_idx = fleet_bruteforce(scen, pol.pu_table, 85.0)
+    np.testing.assert_array_equal(np.asarray(dec),
+                                  np.asarray(pol.pu_table[want_idx]))
+    ms, acc = pol.expected(scen)
+    want_ms, want_acc = nominal_expected_response(scen, dec)
+    np.testing.assert_allclose(ms, np.asarray(want_ms), rtol=1e-6)
+    # the oracle scores 100% of itself through the shared metric
+    ev = holdout_reward_ratio(pol, scen, 85.0)
+    assert ev.ratio == pytest.approx(1.0, abs=1e-6)
+
+
+def test_static_policy_is_the_papers_fixed_strategy():
+    scen = mixed_table5_fleet(jax.random.PRNGKey(4), 8, 3)
+    for strategy, aid in (("device", 0), ("edge", 8), ("cloud", 9)):
+        dec, ids = FleetOrchestrator(StaticPolicy(3, strategy)).route(
+            scen=scen)
+        assert (np.asarray(dec) == aid).all()
+        spec_ids = [int(str(aid) * 3)] * 8       # base-10 joint encoding
+        assert np.asarray(ids).tolist() == spec_ids
+    ms, acc = StaticPolicy(3, "cloud").expected(scen)
+    assert ms.shape == (8,) and (ms > 0).all()
+    # every stateless policy carries the oracle candidate table, so the
+    # shared generalization metric takes it too (regression: used to
+    # AttributeError on pu_table)
+    ev = holdout_reward_ratio(StaticPolicy(3, "device"), scen, 0.0)
+    assert 0.0 < ev.ratio <= 1.0 + 1e-6
+
+
+def test_shared_pad_width_error_for_every_policy():
+    """Satellite: a TraceSource-produced scenario padded to a different
+    width raises the SAME protocol error for the tabular agent, the
+    DQN, and the stateless policies (pre-redesign, only FleetDQN
+    checked)."""
+    from repro.fleet import FleetDQN
+    trace_scen, _ = TraceSource.load(FIXTURE).reset(jax.random.PRNGKey(0))
+    assert trace_scen.users == 3
+    scen2 = mixed_table5_fleet(jax.random.PRNGKey(5), 6, 2)
+    tab = FleetQLearning(scen2, FleetConfig(cells=6, users=2), seed=0)
+    dqn = FleetDQN(scen2, FleetConfig(cells=6, users=2), seed=0)
+    pat = r"routes fleets padded to 2 users; got a 3-wide"
+    for policy in (tab, dqn, OraclePolicy(2), StaticPolicy(2)):
+        with pytest.raises(ValueError, match=pat):
+            FleetOrchestrator(policy).route(scen=trace_scen)
+
+
+# ------------------------------------------------------- agents x source --
+def test_both_agents_train_from_a_trace_source():
+    src = TraceSource.load(FIXTURE)
+    from repro.fleet import FleetDQN
+    tab = FleetQLearning(src, cfg=FleetQConfig(eps_decay=5e-3), seed=0)
+    assert tab.source is src and tab.fleet_cfg is None
+    tab.run(3 * src.horizon)
+    assert int(tab.scen.t) == 3 * src.horizon
+    dqn = FleetDQN(src, seed=0)
+    ms, acc = dqn.run(src.horizon)
+    assert np.isfinite(ms).all()
+    # the shared convergence loop treats a multi-frame trace as dynamic
+    res = tab.train(max_steps=200, check_every=100)
+    assert 0.0 <= res.frac_converged <= 1.0
+
+
+def test_agent_requires_config_or_source():
+    scen = mixed_table5_fleet(jax.random.PRNGKey(0), 4, 2)
+    with pytest.raises(TypeError, match="ScenarioSource"):
+        FleetQLearning(scen)                     # scenario without config
+
+
+# ---------------------------------------------------- deprecation shims ---
+def test_population_fleet_orchestrator_shim_warns_and_matches():
+    """Satellite: the old import path warns but routes identically."""
+    import repro.fleet.api as api
+    import repro.fleet.population as population
+    scen = mixed_table5_fleet(jax.random.PRNGKey(6), 16, 2)
+    agent = FleetQLearning(scen, FleetConfig(cells=16, users=2), seed=1)
+    agent.run(20)
+    with pytest.warns(DeprecationWarning, match="moved to"):
+        old = population.FleetOrchestrator(agent)
+    assert isinstance(old, api.FleetOrchestrator)
+    new = FleetOrchestrator(agent)
+    for o, n in zip(old.route(), new.route()):
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(n))
+
+
+def test_make_fleet_env_step_fleetconfig_shim_warns_and_matches():
+    """Satellite: the direct FleetConfig training path warns but is
+    bit-identical to the new source-based API."""
+    cfg = FleetConfig(cells=8, users=2, p_r2w=0.1, p_w2r=0.2,
+                      arrival_rate=1.0)
+    scen = init_fleet(jax.random.PRNGKey(1), cfg)
+    with pytest.warns(DeprecationWarning, match="SyntheticSource"):
+        old_step = make_fleet_env_step(cfg, threshold=85.0)
+    new_step = make_env_step(SyntheticSource(cfg), threshold=85.0)
+    pu = jnp.full((8, 2), 8, jnp.int32)
+    k = jax.random.PRNGKey(2)
+    o = old_step(k, scen, pu)
+    n = new_step(k, scen, pu)
+    _assert_scen_equal(o[0], n[0])
+    for a, b in zip(o[1:], n[1:]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_legacy_agent_ctor_equals_source_ctor():
+    """(scen, FleetConfig) and SyntheticSource(cfg, scen=scen) are the
+    same agent: identical training streams under the same seed."""
+    cfg = FleetConfig(cells=8, users=2, arrival_rate=1.0)
+    scen = mixed_table5_fleet(jax.random.PRNGKey(7), 8, 2)
+    a = FleetQLearning(scen, cfg, seed=3)
+    b = FleetQLearning(SyntheticSource(cfg, scen=scen), seed=3)
+    a.run(25)
+    b.run(25)
+    np.testing.assert_array_equal(np.asarray(a.q), np.asarray(b.q))
+    _assert_scen_equal(a.scen, b.scen)
+
+
+# ------------------------------------------- ISSUE-4 acceptance: serving --
+def test_trace_train_route_dispatch_end_to_end():
+    """Acceptance: train on a TraceSource, route through
+    FleetOrchestrator, and dispatch at least one batch to a REAL
+    ServingEngine — measured wall-time reported next to the latency
+    model's prediction (paper Table-8 methodology)."""
+    from repro.configs import get_config
+    from repro.launch.serve import build_engines
+    src = TraceSource.load(FIXTURE)
+    agent = FleetQLearning(src, cfg=FleetQConfig(eps_decay=5e-3,
+                                                 accuracy_threshold=85.0),
+                           seed=0)
+    agent.run(4 * src.horizon)
+    engines = build_engines(get_config("edge-ladder"), variants=("d0",),
+                            max_len=48)
+    res = FleetOrchestrator(agent).route(dispatch=engines,
+                                         max_new_tokens=2, batch_size=4,
+                                         prompt_len=8)
+    assert isinstance(res, RouteResult)
+    n_active = int(np.asarray(agent.scen.active).sum())
+    assert len(res.served) == n_active and res.batches >= 1
+    for r in res.served:
+        assert r.tier in ("S", "E", "C") and r.variant == "d0"
+        assert r.measured_ms > 0.0
+        assert np.isfinite(r.predicted_ms) and r.predicted_ms > 0.0
+    # predictions ARE the latency model's per-user times for the routed
+    # decision (the fixture carries a deployment map -> topology path)
+    from repro.fleet import topology
+    want = np.asarray(topology.topology_response_times(
+        res.decisions, agent.scen.end_b, agent.scen.edge_b, agent.scen.topo,
+        active=agent.scen.active, xp=jnp))
+    for r in res.served:
+        assert r.predicted_ms == pytest.approx(want[r.cell, r.user])
+    s = res.summary()
+    assert s["requests"] == n_active and np.isfinite(s["gap_x"])
+    assert s["measured_mean_ms"] > 0 and s["predicted_mean_ms"] > 0
