@@ -6,8 +6,10 @@
 
 ``--json`` additionally writes ``results/BENCH_fleet.json``: the
 fleet-scale headline numbers (env steps/sec, tabular + DQN RL-loop
-steps/sec, converged cells/sec, DQN held-out reward ratio) in one
-machine-readable file so the perf trajectory is tracked across PRs.
+steps/sec, converged cells/sec, DQN held-out reward ratio, topology
+overhead/uplift, trace-replay speedup, sharded per-device throughput
+and local-vs-alltoall aggregation cost) in one machine-readable file
+so the perf trajectory is tracked across PRs (see docs/BENCHMARKS.md).
 """
 import argparse
 import sys
@@ -15,11 +17,12 @@ import time
 
 from benchmarks import (bench_adaptation, bench_fig1_motivation,
                         bench_fig5_user_variability, bench_fig7_transfer,
-                        bench_fleet_dqn, bench_fleet_throughput,
-                        bench_kernels, bench_overhead,
-                        bench_table8_decisions, bench_table9_constraints,
-                        bench_table10_sota, bench_table11_convergence,
-                        bench_topology, bench_trace_replay)
+                        bench_fleet_dqn, bench_fleet_sharded,
+                        bench_fleet_throughput, bench_kernels,
+                        bench_overhead, bench_table8_decisions,
+                        bench_table9_constraints, bench_table10_sota,
+                        bench_table11_convergence, bench_topology,
+                        bench_trace_replay)
 from benchmarks.common import save_json
 
 SUITES = {
@@ -37,10 +40,12 @@ SUITES = {
     "fleet_dqn": bench_fleet_dqn,     # beyond-paper: shared-policy fleet DQN
     "topology": bench_topology,       # beyond-paper: shared edges + cloud q
     "trace_replay": bench_trace_replay,  # beyond-paper: trace + serving bridge
+    "fleet_sharded": bench_fleet_sharded,  # beyond-paper: multi-device fleet
 }
 
 #: suites whose main() returns the headline dict folded into BENCH_fleet.json
-FLEET_SUITES = ("fleet", "fleet_dqn", "topology", "trace_replay")
+FLEET_SUITES = ("fleet", "fleet_dqn", "topology", "trace_replay",
+                "fleet_sharded")
 
 
 def main() -> None:
@@ -73,6 +78,7 @@ def main() -> None:
         dqn = fleet_metrics.get("fleet_dqn", {})
         topo = fleet_metrics.get("topology", {})
         trace = fleet_metrics.get("trace_replay", {})
+        sh = fleet_metrics.get("fleet_sharded", {})
         save_json("BENCH_fleet", {
             "env_steps_per_s": tp.get("fleet_env_steps_per_s"),
             "rl_steps_per_s": tp.get("fleet_rl_steps_per_s"),
@@ -85,6 +91,12 @@ def main() -> None:
             "trace_env_steps_per_s": trace.get("trace_env_steps_per_s"),
             "trace_replay_speedup_x": trace.get("trace_replay_speedup_x"),
             "trace_serving_gap_x": trace.get("serving", {}).get("gap_x"),
+            "sharded_devices": sh.get("devices"),
+            "sharded_env_steps_per_s": sh.get("sharded_env_steps_per_s"),
+            "sharded_per_device_env_steps_per_s":
+                sh.get("per_device_env_steps_per_s"),
+            "sharded_per_device_flatness": sh.get("per_device_flatness"),
+            "sharded_local_vs_alltoall_x": sh.get("local_vs_alltoall_x"),
             "suites": fleet_metrics,
         })
         print("# wrote results/BENCH_fleet.json", flush=True)

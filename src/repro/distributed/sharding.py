@@ -4,6 +4,10 @@ Mesh axes:
   'pod'   - pods (multi-pod only), extra data-parallel dim
   'data'  - within-pod data parallel / FSDP axis
   'model' - tensor/expert parallel axis
+  'fleet' - 1-D fleet data-parallel axis (repro.fleet.shard): the cell
+            population and per-edge arrays shard over it; absent from
+            the model meshes, so the fleet rules are inert there (and
+            the model rules are inert on a fleet mesh)
 
 Logical activation/parameter axes are mapped through RULES. Every
 constraint is divisibility-checked per dimension; a dim that is not
@@ -46,6 +50,11 @@ RULES = {
     "vocab": ("model",),
     "expert": ("model",),
     "d_inner": ("model",),
+    # fleet logical axes (repro.fleet.shard): the cell axis of scenario
+    # arrays / Q-tables / replay rows, and the edge axis of per-edge
+    # arrays in shard-local topologies
+    "cells": ("fleet",),
+    "edges": ("fleet",),
     None: (),
 }
 

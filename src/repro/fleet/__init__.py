@@ -36,11 +36,17 @@ _API = ("FleetOrchestrator", "FleetPolicy", "FleetTrace", "OraclePolicy",
         "make_env_step", "record_trace", "save_trace")
 _TOPOLOGY = ("Topology", "cloud_load_multiplier", "edge_capacities",
              "edge_utilization", "fleet_topology_expected_response",
-             "hot_edge_topology", "identity_topology", "random_topology",
-             "shared_contention", "skewed_topology", "step_edge_failures",
+             "hot_edge_topology", "identity_topology", "is_shard_local",
+             "random_topology", "shard_blocks", "shared_contention",
+             "skewed_topology", "step_edge_failures",
              "topology_expected_response", "topology_response_times")
 _REPLAY = ("FleetReplay", "replay_init", "replay_push", "replay_sample",
            "replay_size")
+_SHARD = ("FLEET_AXIS", "check_shard_local", "constrain_array",
+          "constrain_scenario", "fleet_mesh", "fleet_spec",
+          "local_contention", "local_expected_response", "replicate",
+          "shard_array", "shard_replay", "shard_scenario",
+          "shard_topology")
 _POLICY = ("FleetDQN", "FleetDQNConfig", "HoldoutEval",
            "encode_fleet_state", "holdout_reward_ratio")
 
@@ -49,6 +55,7 @@ __all__ = [
     "feasible", "fleet_actions_expected_response",
     "fleet_expected_response", "response_times", "reward", "t_comp_device",
     *_SCENARIOS, *_POPULATION, *_API, *_REPLAY, *_POLICY, *_TOPOLOGY,
+    *_SHARD,
 ]
 
 
@@ -66,9 +73,11 @@ def __getattr__(name):
         mod = importlib.import_module("repro.fleet.policy")
     elif name in _TOPOLOGY or name == "topology":
         mod = importlib.import_module("repro.fleet.topology")
+    elif name in _SHARD or name == "shard":
+        mod = importlib.import_module("repro.fleet.shard")
     else:
         raise AttributeError(
             f"module 'repro.fleet' has no attribute {name!r}")
     return (mod if name in ("scenarios", "population", "api", "replay",
-                            "policy", "topology")
+                            "policy", "topology", "shard")
             else getattr(mod, name))

@@ -32,9 +32,15 @@ into:
   (`RouteResult`), the paper's Table-8 predicted-vs-measured
   methodology at fleet scale.
 
-Old entry points (``population.FleetOrchestrator``,
-``make_fleet_env_step(FleetConfig)``) keep working through thin
-``DeprecationWarning`` shims for one release.
+Every seam takes a ``mesh=`` knob (``repro.fleet.shard.fleet_mesh``):
+sources place the scenario stream with the cell axis sharded across
+devices, agents shard their per-cell state (or replicate the shared
+policy) to match, and the orchestrator routes sharded fleets — the
+single-device path is bit-identical (see ``fleet.shard``).
+
+The PR-4 deprecation shims (``population.FleetOrchestrator``,
+``make_fleet_env_step(FleetConfig)``) have been removed; see the
+migration table in ``src/repro/fleet/README.md``.
 """
 from __future__ import annotations
 
@@ -120,14 +126,26 @@ class SyntheticSource:
     explicitly built initial fleet (e.g. ``mixed_table5_fleet``);
     ``reset`` then returns it as-is, which is exactly how the agents'
     legacy ``(scen, FleetConfig)`` constructors behaved.
+
+    With a ``mesh`` (``fleet.shard.fleet_mesh``) the stream is placed
+    with the cell axis sharded: ``reset`` device-puts the initial
+    scenario and ``step`` re-asserts the layout, so a jitted training
+    scan keeps every cell's state on the device that owns it. Sharding
+    never changes values — only placement.
     """
 
     state_is_scenario = True
 
     def __init__(self, cfg: FleetConfig,
-                 scen: Optional[FleetScenario] = None):
+                 scen: Optional[FleetScenario] = None, mesh=None):
         self.cfg = cfg
         self._scen0 = scen
+        self.mesh = mesh
+
+    def attach_mesh(self, mesh) -> None:
+        """Adopt the agent's fleet mesh (no-op when None)."""
+        if mesh is not None:
+            self.mesh = mesh
 
     @property
     def cells(self) -> int:
@@ -146,10 +164,16 @@ class SyntheticSource:
     def reset(self, key):
         scen = self._scen0 if self._scen0 is not None \
             else init_fleet(key, self.cfg)
+        if self.mesh is not None:
+            from repro.fleet import shard
+            scen = shard.shard_scenario(scen, self.mesh)
         return scen, scen
 
     def step(self, key, state):
         scen = step_fleet(key, state, self.cfg)
+        if self.mesh is not None:
+            from repro.fleet import shard
+            scen = shard.constrain_scenario(scen, self.mesh)
         return scen, scen
 
 
@@ -312,7 +336,7 @@ class TraceSource:
 
     state_is_scenario = True
 
-    def __init__(self, trace: FleetTrace):
+    def __init__(self, trace: FleetTrace, mesh=None):
         trace.validate()
         self.trace = trace
         self._end_b = jnp.asarray(trace.end_b, jnp.int32)
@@ -320,10 +344,27 @@ class TraceSource:
         self._member = jnp.asarray(trace.member_frames())
         self._active = jnp.asarray(trace.active_frames())
         self._topo = trace.topology()
+        self.mesh = None
+        self.attach_mesh(mesh)
+
+    def attach_mesh(self, mesh) -> None:
+        """Re-place the on-device frames with the CELL axis (dim 1 of
+        the ``(T, cells, ...)`` stacks) sharded over ``mesh`` — each
+        device then holds only its own cells' history, and the per-step
+        frame gather is device-local (no-op when ``mesh`` is None)."""
+        if mesh is None:
+            return
+        from repro.fleet import shard
+        self.mesh = mesh
+        self._end_b = shard.shard_array(self._end_b, mesh, axis=1)
+        self._edge_b = shard.shard_array(self._edge_b, mesh, axis=1)
+        self._member = shard.shard_array(self._member, mesh, axis=1)
+        self._active = shard.shard_array(self._active, mesh, axis=1)
+        self._topo = shard.shard_topology(self._topo, mesh)
 
     @classmethod
-    def load(cls, path) -> "TraceSource":
-        return cls(load_trace(path))
+    def load(cls, path, mesh=None) -> "TraceSource":
+        return cls(load_trace(path), mesh=mesh)
 
     @property
     def cells(self) -> int:
@@ -343,9 +384,13 @@ class TraceSource:
 
     def _frame(self, t) -> FleetScenario:
         i = jnp.mod(t, self.horizon)
-        return FleetScenario(self._end_b[i], self._edge_b[i],
+        scen = FleetScenario(self._end_b[i], self._edge_b[i],
                              self._member[i], self._active[i],
                              jnp.int32(t), self._topo)
+        if self.mesh is not None:
+            from repro.fleet import shard
+            scen = shard.constrain_scenario(scen, self.mesh)
+        return scen
 
     def reset(self, key):
         scen = self._frame(jnp.int32(0))
@@ -402,9 +447,7 @@ def make_env_step(source, threshold: float = 0.0, noise: float = 0.02):
     """Pure per-step fleet environment transition over any
     `ScenarioSource` — returns ``env_step(key, scen, per_user) ->
     (scen2, counts, mean_ms, mean_acc, reward)``, jit/scan friendly.
-    The scenario-source analogue of the legacy
-    ``population.make_fleet_env_step(FleetConfig)`` (which now shims to
-    this)."""
+    ``population.make_fleet_env_step`` forwards here."""
     from repro.fleet.population import simulate_responses
     require_scenario_state(source)
 
@@ -592,10 +635,17 @@ class FleetOrchestrator:
     ``policy_decisions``). ``route()`` keeps the pre-redesign tuple
     contract; ``route(dispatch=engines)`` returns a `RouteResult` with
     measured wall-times next to the model's predictions.
+
+    ``mesh`` (default: the policy's own fleet mesh, if any) places the
+    routed scenario and job counts with the cell axis sharded before
+    the greedy pass, so a device-sharded fleet is routed where its
+    cells live (``repro.fleet.shard``).
     """
 
-    def __init__(self, policy):
+    def __init__(self, policy, mesh=None):
         self.policy = policy
+        self.mesh = mesh if mesh is not None else getattr(policy, "mesh",
+                                                          None)
 
     @property
     def agent(self):
@@ -692,6 +742,10 @@ class FleetOrchestrator:
                 counts = getattr(policy, "counts", None)
         if counts is None:
             counts = jnp.zeros((scen.cells, 2), jnp.int32)
+        if self.mesh is not None:
+            from repro.fleet import shard
+            scen = shard.shard_scenario(scen, self.mesh)
+            counts = shard.shard_array(counts, self.mesh)
         decide = getattr(policy, "decisions", None) or policy.policy_decisions
         dec, ids = decide(counts, scen)
         util = None

@@ -74,8 +74,9 @@ from repro.core.networks import make_factored_q, mlp_apply, mlp_init
 from repro.core.spaces import (N_PER_USER_ACTIONS, SpaceSpec,
                                allowed_per_user)
 from repro.fleet import dynamics
-from repro.fleet.population import (FleetTrainResult, check_pad_width,
-                                    default_actions, fleet_bruteforce,
+from repro.fleet.population import (FleetTrainResult, adopt_mesh,
+                                    check_pad_width, default_actions,
+                                    fleet_bruteforce,
                                     nominal_expected_response,
                                     resolve_source, simulate_responses,
                                     train_against_oracle)
@@ -243,14 +244,23 @@ class FleetDQN:
     def __init__(self, scen, fleet_cfg: Optional[FleetConfig] = None,
                  cfg: Optional[FleetDQNConfig] = None,
                  actions: Optional[np.ndarray] = None, seed: int = 0,
-                 reset_key=None):
+                 reset_key=None, mesh=None):
         """``scen`` is a ``repro.fleet.api.ScenarioSource`` (reset with
         ``reset_key``, default ``PRNGKey(seed)``) — or, equivalently, a
         ``FleetScenario`` plus its ``FleetConfig`` (wrapped into a
-        ``SyntheticSource`` pinned to that scenario)."""
+        ``SyntheticSource`` pinned to that scenario).
+
+        ``mesh`` (``repro.fleet.shard.fleet_mesh``; default: the
+        source's own mesh, if any) is data-parallel training: params
+        and optimizer state REPLICATE across devices, the scenario
+        stream shards along the fleet axis, the replay ring splits its
+        slot blocks across devices (see ``shard.shard_replay`` — push/
+        sample reshard inside the scan), and the mini-batch loss mean
+        becomes the partitioner's cross-device gradient reduction."""
         self.cfg = cfg or FleetDQNConfig()
         scen, self.source = resolve_source(scen, fleet_cfg, seed, reset_key)
         self.fleet_cfg = getattr(self.source, "cfg", None)
+        self.mesh, scen = adopt_mesh(mesh, self.source, scen)
         self.spec = SpaceSpec(scen.users)
         users = scen.users
         if actions is None:
@@ -280,6 +290,12 @@ class FleetDQN:
                                   action_shape=(users,))
         self.scen = scen
         self.counts = jnp.zeros((scen.cells, 2), jnp.int32)
+        if self.mesh is not None:
+            from repro.fleet import shard
+            self.params = shard.replicate(self.params, self.mesh)
+            self.opt = shard.replicate(self.opt, self.mesh)
+            self.buffer = shard.shard_replay(self.buffer, self.mesh)
+            self.counts = shard.shard_array(self.counts, self.mesh)
         self.eps = self.cfg.eps_start
         self.steps = 0
         # one greedy/act/step closure each, threaded through the jitted

@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Optional
 
 import jax
@@ -75,6 +74,22 @@ def resolve_source(scen, fleet_cfg, seed: int, reset_key=None):
             "pass a ScenarioSource (repro.fleet.api), or a FleetScenario "
             "together with its FleetConfig")
     return scen, SyntheticSource(fleet_cfg, scen=scen)
+
+
+def adopt_mesh(mesh, source, scen):
+    """THE mesh-adoption step of both agent constructors: resolve the
+    fleet mesh (an explicit argument wins, else the source's own),
+    attach it to the source so the jitted scenario stream keeps the
+    layout, and place the initial scenario. Returns ``(mesh, scen)``
+    (``(None, scen)`` when no mesh is in play)."""
+    mesh = mesh if mesh is not None else getattr(source, "mesh", None)
+    if mesh is None:
+        return None, scen
+    from repro.fleet import shard
+    attach = getattr(source, "attach_mesh", None)
+    if attach is not None:
+        attach(mesh)
+    return mesh, shard.shard_scenario(scen, mesh)
 
 
 def simulate_responses(key, scen: FleetScenario, per_user, noise: float):
@@ -124,7 +139,7 @@ def nominal_expected_response(scen: FleetScenario, per_user):
         per_user, scen.end_b, scen.edge_b, scen.topo, scen.member)
 
 
-def make_fleet_env_step(fleet_cfg, threshold: float = 0.0,
+def make_fleet_env_step(source, threshold: float = 0.0,
                         noise: float = 0.02):
     """Pure per-step fleet environment transition — the fleet analogue of
     ``EndEdgeCloudEnv.step`` with the decision supplied externally.
@@ -134,19 +149,17 @@ def make_fleet_env_step(fleet_cfg, threshold: float = 0.0,
     (scen2, counts2, mean_ms, mean_acc, reward)``; wrap in ``jax.jit`` /
     ``lax.scan`` to step every cell of the fleet per call.
 
-    Passing a raw ``FleetConfig`` is deprecated (it wraps into a
-    ``SyntheticSource`` with identical results — same generators, same
-    key usage — but new code should construct the source explicitly).
+    The PR-4 ``make_fleet_env_step(FleetConfig)`` deprecation shim has
+    been removed — wrap the config in a ``SyntheticSource`` (results
+    are bit-identical; same generators, same key usage).
     """
-    from repro.fleet.api import SyntheticSource, make_env_step
-    if isinstance(fleet_cfg, FleetConfig):
-        warnings.warn(
-            "make_fleet_env_step(FleetConfig) is deprecated; pass a "
-            "ScenarioSource instead, e.g. "
-            "repro.fleet.api.SyntheticSource(cfg)",
-            DeprecationWarning, stacklevel=2)
-        fleet_cfg = SyntheticSource(fleet_cfg)
-    return make_env_step(fleet_cfg, threshold=threshold, noise=noise)
+    from repro.fleet.api import make_env_step
+    if isinstance(source, FleetConfig):
+        raise TypeError(
+            "make_fleet_env_step(FleetConfig) was removed; wrap the "
+            "config: make_fleet_env_step(repro.fleet.api."
+            "SyntheticSource(cfg)) — bit-identical results")
+    return make_env_step(source, threshold=threshold, noise=noise)
 
 
 def default_actions(spec: SpaceSpec) -> np.ndarray:
@@ -180,14 +193,21 @@ class FleetQLearning:
     def __init__(self, scen, fleet_cfg: Optional[FleetConfig] = None,
                  cfg: Optional[FleetQConfig] = None,
                  actions: Optional[np.ndarray] = None, seed: int = 0,
-                 reset_key=None):
+                 reset_key=None, mesh=None):
         """``scen`` is a ``repro.fleet.api.ScenarioSource`` (reset with
         ``reset_key``, default ``PRNGKey(seed)``) — or, equivalently, a
         ``FleetScenario`` plus its ``FleetConfig`` (wrapped into a
-        ``SyntheticSource`` pinned to that scenario)."""
+        ``SyntheticSource`` pinned to that scenario).
+
+        ``mesh`` (``repro.fleet.shard.fleet_mesh``; default: the
+        source's own mesh, if any) shards the per-cell Q-table, job
+        counts, and scenario along the fleet axis — the TD update is
+        per-cell, so training never leaves the shard, bit-identical to
+        the single-device path."""
         self.cfg = cfg or FleetQConfig()
         scen, self.source = resolve_source(scen, fleet_cfg, seed, reset_key)
         self.fleet_cfg = getattr(self.source, "cfg", None)
+        self.mesh, scen = adopt_mesh(mesh, self.source, scen)
         self.spec = SpaceSpec(scen.users)
         self.actions = np.asarray(actions if actions is not None
                                   else default_actions(self.spec))
@@ -202,6 +222,10 @@ class FleetQLearning:
                            jnp.float32)
         self.scen = scen
         self.counts = jnp.zeros((scen.cells, 2), jnp.int32)
+        if self.mesh is not None:
+            from repro.fleet import shard
+            self.q = shard.shard_array(self.q, self.mesh)
+            self.counts = shard.shard_array(self.counts, self.mesh)
         self.eps = self.cfg.eps_start
         self.key = jax.random.PRNGKey(seed)
         self.steps = 0
@@ -616,17 +640,3 @@ def topology_bruteforce(scen: FleetScenario, pu_table: jnp.ndarray,
     return ms, idx, converged, rounds
 
 
-class FleetOrchestrator:
-    """Deprecated import path: the fleet orchestrator moved to
-    ``repro.fleet.api`` (where ``route`` grew the ``dispatch=engines``
-    serving bridge). This shim constructs the real thing — identical
-    behavior — and will be removed next release."""
-
-    def __new__(cls, agent):
-        from repro.fleet.api import FleetOrchestrator as _FleetOrchestrator
-        warnings.warn(
-            "repro.fleet.population.FleetOrchestrator has moved to "
-            "repro.fleet.api — import FleetOrchestrator from repro.fleet "
-            "(this shim will be removed next release)",
-            DeprecationWarning, stacklevel=2)
-        return _FleetOrchestrator(agent)

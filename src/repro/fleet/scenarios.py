@@ -164,6 +164,11 @@ class FleetConfig:
     capacity_tiers: Tuple[float, ...] = (1.0,)
     cloud_servers: float = float("inf")   # M/M/c queue size; inf = off
     p_edge_fail: float = 0.0              # per-step edge-failure prob.
+    # sharding: cap the random assignment's locality to the device
+    # blocks of an n_shards-way fleet mesh (repro.fleet.shard) so the
+    # per-edge aggregation never crosses devices; None = device count
+    shard_local: bool = False
+    n_shards: Optional[int] = None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -210,8 +215,23 @@ def make_topology(key, cfg: FleetConfig) -> Optional[Topology]:
         return None
     kw = dict(capacity_tiers=tuple(cfg.capacity_tiers),
               cloud_servers=cfg.cloud_servers)
+    if cfg.shard_local and cfg.assignment != "random":
+        raise ValueError(
+            f"shard_local topologies are generated by the 'random' "
+            f"assignment, not {cfg.assignment!r} (skewed/hot edges "
+            "deliberately concentrate cells across blocks)")
+    if cfg.shard_local and cfg.p_edge_fail:
+        raise ValueError(
+            "shard_local=True cannot be combined with p_edge_fail: "
+            "step_edge_failures reroutes a failed edge's cells to ANY "
+            "other edge, which breaks the shard-locality invariant "
+            "local_contention relies on (and under jit the violation "
+            "cannot be detected) — use the all-to-all path for fleets "
+            "with edge failures")
     if cfg.assignment == "random":
-        return random_topology(key, cfg.cells, cfg.n_edges, **kw)
+        return random_topology(key, cfg.cells, cfg.n_edges,
+                               shard_local=cfg.shard_local,
+                               n_shards=cfg.n_shards, **kw)
     if cfg.assignment == "skewed":
         return skewed_topology(key, cfg.cells, cfg.n_edges, skew=cfg.skew,
                                **kw)

@@ -42,6 +42,7 @@ or its sibling fleet modules — ``scenarios`` attaches a ``Topology`` to
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -110,12 +111,58 @@ def identity_topology(cells: int, cloud_servers: float = np.inf) -> Topology:
                     jnp.float32(cloud_servers))
 
 
+def shard_blocks(cells: int, n_edges: int, n_shards: int):
+    """Validated block sizes ``(cells_per_shard, edges_per_shard)`` of a
+    shard-local layout: the first ``cells_per_shard`` cells and the
+    first ``edges_per_shard`` edges belong to shard 0, and so on —
+    exactly the contiguous blocks ``NamedSharding`` places on each
+    device of a 1-D fleet mesh (``repro.fleet.shard``)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if cells % n_shards or n_edges % n_shards:
+        raise ValueError(
+            f"shard-local layout needs cells ({cells}) and n_edges "
+            f"({n_edges}) divisible by n_shards ({n_shards}) so the "
+            "contiguous device blocks line up")
+    return cells // n_shards, n_edges // n_shards
+
+
 def random_topology(key, cells: int, n_edges: int, capacity_tiers=(1.0,),
-                    cloud_servers: float = np.inf) -> Topology:
-    """Uniform cell->edge assignment."""
-    ce = jax.random.randint(key, (cells,), 0, n_edges).astype(jnp.int32)
+                    cloud_servers: float = np.inf,
+                    shard_local: bool = False,
+                    n_shards: Optional[int] = None) -> Topology:
+    """Uniform cell->edge assignment.
+
+    ``shard_local=True`` caps the assignment's locality to the device
+    blocks of an ``n_shards``-way fleet mesh (default: every local
+    device): cells and edges are split into ``n_shards`` contiguous
+    equal blocks, and a cell draws its edge uniformly WITHIN its own
+    block — so when both arrays are sharded along the fleet axis, no
+    edge is ever shared across devices and the per-edge segment-sum
+    aggregation stays entirely shard-local
+    (``repro.fleet.shard.local_contention``). The unconstrained
+    assignment instead couples arbitrary cells, turning the aggregation
+    into a cross-shard reduction (the all-to-all path)."""
+    if not shard_local:
+        ce = jax.random.randint(key, (cells,), 0, n_edges).astype(jnp.int32)
+    else:
+        if n_shards is None:
+            n_shards = jax.device_count()
+        cpb, epb = shard_blocks(cells, n_edges, n_shards)
+        block = jnp.arange(cells, dtype=jnp.int32) // cpb
+        ce = (block * epb
+              + jax.random.randint(key, (cells,), 0, epb)).astype(jnp.int32)
     return Topology(ce, edge_capacities(n_edges, capacity_tiers),
                     jnp.float32(cloud_servers))
+
+
+def is_shard_local(topo: Topology, n_shards: int) -> bool:
+    """Host-side check of the shard-locality invariant: every cell's
+    edge lies in the cell's own contiguous shard block (no edge spans
+    devices when both arrays are sharded along the fleet axis)."""
+    cpb, epb = shard_blocks(topo.cells, topo.n_edges, n_shards)
+    ce = np.asarray(topo.cell_edge)
+    return bool(((np.arange(topo.cells) // cpb) == (ce // epb)).all())
 
 
 def skewed_topology(key, cells: int, n_edges: int, skew: float = 1.5,

@@ -4,12 +4,11 @@ Covers: SyntheticSource bit-exactness against the pre-redesign
 generator streams, the recorded-trace format (golden fixture
 round-trip), TraceSource replay into the jitted training loops, the
 FleetPolicy protocol (agents + oracle + static baselines behind one
-surface), the shared pad-width protocol error, the deprecation shims,
+surface), the shared pad-width protocol error, the removed PR-4 shims,
 and the end-to-end acceptance path: train on a trace, route through
 FleetOrchestrator, dispatch to a real ServingEngine with measured
 wall-time next to the model's prediction."""
 import os
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -273,38 +272,15 @@ def test_agent_requires_config_or_source():
         FleetQLearning(scen)                     # scenario without config
 
 
-# ---------------------------------------------------- deprecation shims ---
-def test_population_fleet_orchestrator_shim_warns_and_matches():
-    """Satellite: the old import path warns but routes identically."""
-    import repro.fleet.api as api
+# ------------------------------------------------ removed PR-4 shims ------
+def test_pr4_deprecation_shims_are_gone():
+    """Satellite: the one-release shims were removed — the old
+    population import path no longer exists, and the raw-FleetConfig
+    env-step form fails with a clear pointer to SyntheticSource."""
     import repro.fleet.population as population
-    scen = mixed_table5_fleet(jax.random.PRNGKey(6), 16, 2)
-    agent = FleetQLearning(scen, FleetConfig(cells=16, users=2), seed=1)
-    agent.run(20)
-    with pytest.warns(DeprecationWarning, match="moved to"):
-        old = population.FleetOrchestrator(agent)
-    assert isinstance(old, api.FleetOrchestrator)
-    new = FleetOrchestrator(agent)
-    for o, n in zip(old.route(), new.route()):
-        np.testing.assert_array_equal(np.asarray(o), np.asarray(n))
-
-
-def test_make_fleet_env_step_fleetconfig_shim_warns_and_matches():
-    """Satellite: the direct FleetConfig training path warns but is
-    bit-identical to the new source-based API."""
-    cfg = FleetConfig(cells=8, users=2, p_r2w=0.1, p_w2r=0.2,
-                      arrival_rate=1.0)
-    scen = init_fleet(jax.random.PRNGKey(1), cfg)
-    with pytest.warns(DeprecationWarning, match="SyntheticSource"):
-        old_step = make_fleet_env_step(cfg, threshold=85.0)
-    new_step = make_env_step(SyntheticSource(cfg), threshold=85.0)
-    pu = jnp.full((8, 2), 8, jnp.int32)
-    k = jax.random.PRNGKey(2)
-    o = old_step(k, scen, pu)
-    n = new_step(k, scen, pu)
-    _assert_scen_equal(o[0], n[0])
-    for a, b in zip(o[1:], n[1:]):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not hasattr(population, "FleetOrchestrator")
+    with pytest.raises(TypeError, match="SyntheticSource"):
+        make_fleet_env_step(FleetConfig(cells=4, users=2))
 
 
 def test_legacy_agent_ctor_equals_source_ctor():

@@ -19,7 +19,7 @@ from repro.fleet import (FleetConfig, FleetDQN, FleetDQNConfig,
                          hot_edge_topology, identity_topology, init_fleet,
                          make_fleet_env_step, make_topology,
                          mixed_table5_fleet, random_topology,
-                         simulate_responses, skewed_topology,
+                         simulate_responses, skewed_topology, SyntheticSource,
                          step_edge_failures, step_fleet, table5_fleet,
                          topology_bruteforce, topology_expected_response,
                          topology_response_times, with_topology)
@@ -324,7 +324,7 @@ def test_fleet_env_step_with_topology_in_scan():
     cfg = FleetConfig(cells=16, users=2, n_edges=4, assignment="skewed",
                       cloud_servers=8.0, p_edge_fail=0.1)
     scen = init_fleet(jax.random.PRNGKey(0), cfg)
-    env_step = make_fleet_env_step(cfg, threshold=85.0)
+    env_step = make_fleet_env_step(SyntheticSource(cfg), threshold=85.0)
 
     def run(key, scen, actions):
         def body(carry, a):

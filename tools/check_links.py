@@ -1,0 +1,70 @@
+"""Docs link-check: every relative markdown link in README.md, docs/,
+and the per-package READMEs must resolve to a real file or directory.
+
+Usage:  python tools/check_links.py   (exit 1 on any dangling link)
+
+External links (http/https/mailto) and pure in-page anchors are
+skipped — this guards the repo's own structure, not the internet.
+"""
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+#: inline markdown links: [text](target); images share the syntax
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def md_files():
+    yield os.path.join(ROOT, "README.md")
+    for base in ("docs", "src", "tests", "benchmarks", "examples"):
+        for dirpath, dirnames, filenames in os.walk(os.path.join(ROOT, base)):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for f in filenames:
+                if f.endswith(".md"):
+                    yield os.path.join(dirpath, f)
+
+
+def check(path) -> list:
+    bad = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # drop fenced code blocks — `[x](y)` inside code is not a link
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), target))
+        if not os.path.exists(resolved):
+            bad.append((target, resolved))
+    return bad
+
+
+def main() -> int:
+    failures = 0
+    for path in md_files():
+        if not os.path.exists(path):
+            print(f"MISSING FILE: {os.path.relpath(path, ROOT)}")
+            failures += 1
+            continue
+        for target, resolved in check(path):
+            rel = os.path.relpath(path, ROOT)
+            print(f"DANGLING: {rel}: ({target}) -> "
+                  f"{os.path.relpath(resolved, ROOT)}")
+            failures += 1
+    if failures:
+        print(f"{failures} dangling link(s)")
+        return 1
+    print("all relative markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
