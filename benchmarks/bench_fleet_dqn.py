@@ -9,6 +9,7 @@ Emits:
   fleet_dqn_vs_tabular,<ratio>,DQN/tabular RL-loop throughput
   fleet_dqn_step_cells{n},<us/fleet-step>,one jitted step at n cells
   fleet_dqn_step_flatness,<ratio>,largest/smallest per-step time ...
+  fleet_dqn_obs_overhead_x,<ratio>,uninstrumented/instrumented throughput
   fleet_dqn_holdout_ratio,<ratio>,expected reward vs bruteforce ...
   fleet_dqn_training,<us/cell-step>,converged_cells_per_s=...
 
@@ -64,6 +65,23 @@ def bench_step_scaling(sizes, steps: int, chunk: int):
     return out, flat
 
 
+def bench_obs_overhead(cells: int, steps: int, chunk: int) -> float:
+    """Instrumented-vs-uninstrumented RL-loop throughput: the obs
+    accumulator rides the scan carry with elementwise updates and zero
+    host syncs, so the ratio should sit at ~1.0 (no per-step
+    regression — the ISSUE-6 acceptance; tools/obs_smoke.py gates it
+    at < 1.05 in CI with noise-tolerant best-of-N timing)."""
+    on = bench_rl(FleetDQN, cells, steps, chunk,
+                  cfg=FleetDQNConfig(), seed=0)
+    off = bench_rl(FleetDQN, cells, steps, chunk,
+                   cfg=FleetDQNConfig(), seed=0, metrics=False)
+    ratio = off / on
+    emit("fleet_dqn_obs_overhead_x", ratio,
+         f"uninstrumented/instrumented steps-per-s at {cells} cells "
+         "(1.0 = metrics are free)")
+    return ratio
+
+
 def bench_holdout(train_cells: int, train_steps: int, hold_cells: int):
     """Train one shared policy on 2-3-user Table-5 cells, score the
     expected reward of its greedy decisions on a HELD-OUT fleet that
@@ -107,6 +125,7 @@ def main(tiny: bool = False):
          f"DQN/tabular RL-loop throughput at {cells} cells "
          f"(tabular {tab_sps:.0f} steps/s)")
     per_step, flatness = bench_step_scaling(sizes, steps, chunk)
+    obs_overhead = bench_obs_overhead(cells, steps, chunk)
     ratio, train_sps = bench_holdout(tr_cells, tr_steps, hold)
     emit("fleet_dqn_training", 1e6 / train_sps,
          f"cell-steps_per_s={train_sps:.0f} during holdout training")
@@ -116,6 +135,7 @@ def main(tiny: bool = False):
         "tabular_rl_steps_per_s": tab_sps,
         "us_per_fleet_step": {str(k): v for k, v in per_step.items()},
         "step_flatness": flatness,
+        "obs_overhead_x": obs_overhead,
         "holdout_reward_ratio": ratio,
         "train_cell_steps_per_s": train_sps,
     }

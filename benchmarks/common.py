@@ -22,10 +22,17 @@ def emit(name: str, us_per_call: float, derived):
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
 
-def save_json(name: str, obj):
+def save_json(name: str, obj, **manifest_extra):
+    """Write ``results/<name>.json``, stamped with the provenance
+    manifest (git SHA, jax version, config hash, ...; see
+    ``repro.obs.report``) so every BENCH JSON says what produced it.
+    ``manifest_extra`` (e.g. ``wall_seconds=...``) merges into the
+    manifest."""
+    from repro.obs.report import attach_manifest
     os.makedirs(RESULTS_DIR, exist_ok=True)
+    payload = attach_manifest(dict(obj), **manifest_extra)
     with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
-        json.dump(obj, f, indent=1, default=str)
+        json.dump(payload, f, indent=1, default=str)
 
 
 class Timer:

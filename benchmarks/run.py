@@ -10,6 +10,9 @@ steps/sec, converged cells/sec, DQN held-out reward ratio, topology
 overhead/uplift, trace-replay speedup, sharded per-device throughput
 and local-vs-alltoall aggregation cost) in one machine-readable file
 so the perf trajectory is tracked across PRs (see docs/BENCHMARKS.md).
+Every JSON is stamped with a provenance manifest (git SHA, jax
+version, config hash — ``repro.obs.report``); pretty-print or diff
+runs with ``python tools/obsview.py``.
 """
 import argparse
 import sys
@@ -86,6 +89,7 @@ def main() -> None:
             "converged_cells_per_s": tp.get("train_converged_cells_per_s"),
             "dqn_holdout_reward_ratio": dqn.get("holdout_reward_ratio"),
             "dqn_step_flatness": dqn.get("step_flatness"),
+            "dqn_obs_overhead_x": dqn.get("obs_overhead_x"),
             "topology_env_overhead_x": topo.get("topology_env_overhead_x"),
             "topology_hot_edge_uplift": topo.get("hot_edge_reward_uplift"),
             "trace_env_steps_per_s": trace.get("trace_env_steps_per_s"),
@@ -98,7 +102,8 @@ def main() -> None:
             "sharded_per_device_flatness": sh.get("per_device_flatness"),
             "sharded_local_vs_alltoall_x": sh.get("local_vs_alltoall_x"),
             "suites": fleet_metrics,
-        })
+        }, wall_seconds=time.time() - t0,
+            failures=[n for n, _ in failures])
         print("# wrote results/BENCH_fleet.json", flush=True)
     print(f"# done in {time.time()-t0:.0f}s; failures: "
           f"{[n for n, _ in failures] or 'none'}")

@@ -27,7 +27,8 @@ _SCENARIOS = ("FleetConfig", "FleetScenario", "arrivals_from_timestamps",
               "table5_fleet", "with_topology")
 _POPULATION = ("FleetQConfig", "FleetQLearning", "FleetTrainResult",
                "check_pad_width", "default_actions", "fleet_bruteforce",
-               "make_fleet_env_step", "nominal_expected_response",
+               "fleet_metrics", "make_fleet_env_step",
+               "nominal_expected_response", "place_metrics",
                "resolve_source", "simulate_responses",
                "topology_bruteforce", "train_against_oracle")
 _API = ("FleetOrchestrator", "FleetPolicy", "FleetTrace", "OraclePolicy",

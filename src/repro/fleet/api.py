@@ -45,6 +45,7 @@ migration table in ``src/repro/fleet/README.md``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, List, Optional, Protocol, Tuple, Union, \
     runtime_checkable
 
@@ -53,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fleet import dynamics, topology
+from repro.obs.spans import span as _span
 from repro.fleet.population import (check_pad_width, default_actions,
                                     fleet_bruteforce,
                                     nominal_expected_response)
@@ -572,6 +574,7 @@ class ServedRequest:
     variant: str                # model variant actually served (e.g. 'd2')
     predicted_ms: float         # latency model's per-user prediction
     measured_ms: float          # engine batch wall-clock (ms)
+    queue_ms: float = 0.0       # submit -> batch-drain wait (ms)
 
 
 @dataclasses.dataclass
@@ -583,6 +586,11 @@ class RouteResult:
     served: List[ServedRequest]
     batches: int                # engine batches drained
     edge_util: Optional[jnp.ndarray] = None
+    #: dispatch wall-time decomposition from ``FleetOrchestrator.
+    #: _dispatch`` (None when nothing was dispatched)
+    timings: Optional[dict] = None
+    #: utilization fraction above which an edge counts as hot
+    hot_edge_util: float = 1.0
 
     @property
     def predicted_ms(self) -> np.ndarray:
@@ -600,13 +608,77 @@ class RouteResult:
         return float(self.measured_ms.mean() / max(p.mean(), 1e-9)) \
             if len(p) else float("nan")
 
+    @property
+    def hot_edges(self) -> Optional[List[int]]:
+        """Edges whose utilization (jobs/capacity, ``edge_utilization``)
+        is at or above ``hot_edge_util`` — the threshold signal on top
+        of the raw ``edge_util`` vector. None without edge_util."""
+        if self.edge_util is None:
+            return None
+        util = np.asarray(self.edge_util)
+        return [int(i) for i in np.nonzero(util >= self.hot_edge_util)[0]]
+
+    def gap_breakdown(self) -> Optional[dict]:
+        """Decompose the Table-8 ``gap_x`` (None without a dispatch).
+
+        Two exact decompositions, both asserted end-to-end in the test
+        suite:
+
+        * per request: ``queueing + compute == e2e`` (ms and, divided
+          by the predicted mean, in gap units — ``compute`` alone is
+          the legacy ``gap_x``);
+        * dispatch wall: ``batching + compute + dispatch == total``,
+          where ``batching`` is the prompt-build/submit loop,
+          ``compute`` the raw host wall of the engine calls, and
+          ``dispatch`` the residual drain overhead.
+
+        Per (tier, variant): request/batch counts, queueing delay,
+        raw vs compute_scale-emulated engine wall, and the tier's own
+        gap_x — which tier's latency model is off, not just that one is.
+        """
+        if self.timings is None or not self.served:
+            return None
+        t = self.timings
+        p = float(self.predicted_ms.mean())
+        m = float(self.measured_ms.mean())
+        q = float(np.mean([r.queue_ms for r in self.served]))
+        denom = max(p, 1e-9)
+        per = {}
+        for key, tv in t["per_tier_variant"].items():
+            rs = [r for r in self.served
+                  if f"{r.tier}/{r.variant}" == key]
+            pm = float(np.mean([r.predicted_ms for r in rs]))
+            mm = float(np.mean([r.measured_ms for r in rs]))
+            per[key] = dict(tv, predicted_mean_ms=pm, measured_mean_ms=mm,
+                            gap_x=mm / max(pm, 1e-9))
+        return {
+            "gap_x": self.gap_x,
+            "per_request_ms": {"predicted": p, "queueing": q,
+                               "compute": m, "e2e": q + m},
+            "gap_components_x": {"queueing": q / denom,
+                                 "compute": m / denom,
+                                 "e2e": (q + m) / denom},
+            "wall_ms": {"total": t["wall_ms"],
+                        "batching": t["batching_ms"],
+                        "compute": t["compute_ms"],
+                        "dispatch": t["dispatch_ms"]},
+            "per_tier_variant": per,
+        }
+
     def summary(self) -> dict:
-        return {"requests": len(self.served), "batches": self.batches,
-                "predicted_mean_ms": float(self.predicted_ms.mean())
-                if self.served else None,
-                "measured_mean_ms": float(self.measured_ms.mean())
-                if self.served else None,
-                "gap_x": self.gap_x}
+        s = {"requests": len(self.served), "batches": self.batches,
+             "predicted_mean_ms": float(self.predicted_ms.mean())
+             if self.served else None,
+             "measured_mean_ms": float(self.measured_ms.mean())
+             if self.served else None,
+             "gap_x": self.gap_x}
+        if self.edge_util is not None:
+            s["hot_edges"] = self.hot_edges
+            s["hot_edge_util"] = self.hot_edge_util
+        breakdown = self.gap_breakdown()
+        if breakdown is not None:
+            s["gap_breakdown"] = breakdown
+        return s
 
 
 def _tier_variant(a: int, local_variants) -> Tuple[str, str]:
@@ -665,8 +737,9 @@ class FleetOrchestrator:
 
     def _dispatch(self, dec, scen: FleetScenario, engines,
                   prompts: Optional[Callable], max_new_tokens: int,
-                  batch_size: int, prompt_len: int, seed: int):
+                  batch_size: int, prompt_len: int, seed: int, spans=None):
         from repro.serving import Request, RequestBatcher
+        t0 = time.perf_counter()
         dec_np = np.asarray(dec)
         active = np.asarray(scen.active)
         pred = np.asarray(self._predicted_per_user_ms(dec, scen))
@@ -680,42 +753,79 @@ class FleetOrchestrator:
         vocab = int(any_eng.model.cfg.vocab_size)
         rng = np.random.default_rng(seed)
         batchers, meta = {}, {}
-        for rid, (c, u) in enumerate(zip(*np.nonzero(active))):
-            a = int(dec_np[c, u])
-            tier, variant = _tier_variant(a, local)
-            if tier not in engines or variant not in engines[tier]:
-                raise KeyError(
-                    f"no engine for tier {tier!r} variant {variant!r}; "
-                    "build_engines(...) must cover the routed decisions")
-            p = (np.asarray(prompts(int(c), int(u)), np.int32)
-                 if prompts is not None
-                 else rng.integers(0, vocab, prompt_len).astype(np.int32))
-            meta[rid] = (int(c), int(u), a, tier, variant)
-            batchers.setdefault((tier, variant),
-                                RequestBatcher(batch_size)).submit(
-                Request(rid, p, max_new_tokens=max_new_tokens, user=int(u)))
-        served, batches = [], 0
+        with _span(spans, "dispatch.batch_build"):
+            for rid, (c, u) in enumerate(zip(*np.nonzero(active))):
+                a = int(dec_np[c, u])
+                tier, variant = _tier_variant(a, local)
+                if tier not in engines or variant not in engines[tier]:
+                    raise KeyError(
+                        f"no engine for tier {tier!r} variant {variant!r}; "
+                        "build_engines(...) must cover the routed decisions")
+                p = (np.asarray(prompts(int(c), int(u)), np.int32)
+                     if prompts is not None
+                     else rng.integers(0, vocab,
+                                       prompt_len).astype(np.int32))
+                meta[rid] = (int(c), int(u), a, tier, variant)
+                batchers.setdefault((tier, variant),
+                                    RequestBatcher(batch_size)).submit(
+                    Request(rid, p, max_new_tokens=max_new_tokens,
+                            user=int(u)))
+        t_build = time.perf_counter()
+        served, batches, compute_s = [], 0, 0.0
+        per_tv = {}
         for (tier, variant), batcher in batchers.items():
             eng = engines[tier][variant]
-            while True:
-                done = eng.serve(batcher)
-                if not done:
-                    break
-                batches += 1
-                for r in done:
-                    c, u, a, t_, v_ = meta[r.rid]
-                    served.append(ServedRequest(
-                        c, u, a, t_, v_, float(pred[c, u]),
-                        float(r.response_time * 1e3)))
+            key = f"{tier}/{variant}"
+            tv = per_tv.setdefault(key, {"requests": 0, "batches": 0,
+                                         "compute_ms": 0.0,
+                                         "emulated_ms": 0.0,
+                                         "queue_ms": []})
+            with _span(spans, f"dispatch.drain.{key}",
+                       queued=len(batcher.queue)):
+                while True:
+                    done = eng.serve(batcher, spans=spans)
+                    if not done:
+                        break
+                    batches += 1
+                    tv["batches"] += 1
+                    # serve_time is per BATCH (every request in `done`
+                    # carries the same stamp): count it once
+                    compute_s += done[0].serve_time
+                    tv["compute_ms"] += done[0].serve_time * 1e3
+                    tv["emulated_ms"] += done[0].response_time * 1e3
+                    for r in done:
+                        c, u, a, t_, v_ = meta[r.rid]
+                        q_ms = float(r.queue_time * 1e3)
+                        tv["requests"] += 1
+                        tv["queue_ms"].append(q_ms)
+                        served.append(ServedRequest(
+                            c, u, a, t_, v_, float(pred[c, u]),
+                            float(r.response_time * 1e3), queue_ms=q_ms))
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        batching_ms = (t_build - t0) * 1e3
+        compute_ms = compute_s * 1e3
+        for tv in per_tv.values():
+            q = tv.pop("queue_ms")
+            tv["queue_ms_mean"] = float(np.mean(q)) if q else 0.0
+        # batching + compute are disjoint sub-intervals of the dispatch
+        # wall on one monotonic clock, so the residual is >= 0 and the
+        # three components sum to wall_ms exactly (the gap_breakdown
+        # identity the acceptance test pins)
+        timings = {"wall_ms": wall_ms, "batching_ms": batching_ms,
+                   "compute_ms": compute_ms,
+                   "dispatch_ms": wall_ms - batching_ms - compute_ms,
+                   "per_tier_variant": per_tv}
         served.sort(key=lambda s: (s.cell, s.user))
-        return served, batches
+        return served, batches, timings
 
     # ------------------------------------------------------------------
     def route(self, scen: Optional[FleetScenario] = None,
               counts: Optional[jnp.ndarray] = None,
               with_edge_util: bool = False, dispatch=None,
               prompts: Optional[Callable] = None, max_new_tokens: int = 4,
-              batch_size: int = 8, prompt_len: int = 12, seed: int = 0):
+              batch_size: int = 8, prompt_len: int = 12, seed: int = 0,
+              spans=None, hot_edge_util: float = 1.0,
+              as_result: bool = False):
         """Route the whole fleet in one greedy pass.
 
         Without ``dispatch`` this is the pre-redesign contract:
@@ -729,7 +839,17 @@ class FleetOrchestrator:
         per-(tier, variant) ``RequestBatcher``s and returns a
         `RouteResult`: measured batch wall-times next to the latency
         model's per-user predictions (``prompts(cell, user) -> int32
-        tokens`` overrides the synthetic prompts).
+        tokens`` overrides the synthetic prompts), with
+        ``summary()['gap_breakdown']`` decomposing the gap into
+        queueing / batching / dispatch / engine-compute components.
+
+        Observability knobs: ``spans`` (a ``repro.obs.spans.
+        SpanRecorder``) records route.decide / dispatch.* /
+        engine.* spans as Chrome-trace events; ``hot_edge_util`` sets
+        the utilization fraction at or above which an edge lands in
+        ``RouteResult.hot_edges``; ``as_result=True`` returns a
+        `RouteResult` even without a dispatch (empty ``served``), so
+        callers get one return shape.
         """
         policy = self.policy
         if scen is None:
@@ -747,18 +867,32 @@ class FleetOrchestrator:
             scen = shard.shard_scenario(scen, self.mesh)
             counts = shard.shard_array(counts, self.mesh)
         decide = getattr(policy, "decisions", None) or policy.policy_decisions
-        dec, ids = decide(counts, scen)
+        with _span(spans, "route.decide", cells=int(scen.cells)):
+            dec, ids = decide(counts, scen)
+            if spans is not None:
+                # only when instrumenting: make the decide span cover
+                # the actual device work, not just its dispatch
+                jax.block_until_ready(dec)
         util = None
         if with_edge_util:
-            topo = (scen.topo if scen.topo is not None
-                    else topology.identity_topology(scen.cells))
-            util = topology.edge_utilization(dec, topo, active=scen.active)
+            with _span(spans, "route.edge_util"):
+                topo = (scen.topo if scen.topo is not None
+                        else topology.identity_topology(scen.cells))
+                util = topology.edge_utilization(dec, topo,
+                                                 active=scen.active)
         if dispatch is not None:
-            served, batches = self._dispatch(dec, scen, dispatch, prompts,
-                                             max_new_tokens, batch_size,
-                                             prompt_len, seed)
+            with _span(spans, "route.dispatch"):
+                served, batches, timings = self._dispatch(
+                    dec, scen, dispatch, prompts, max_new_tokens,
+                    batch_size, prompt_len, seed, spans=spans)
             return RouteResult(decisions=dec, ids=ids, served=served,
-                               batches=batches, edge_util=util)
+                               batches=batches, edge_util=util,
+                               timings=timings,
+                               hot_edge_util=hot_edge_util)
+        if as_result:
+            return RouteResult(decisions=dec, ids=ids, served=[],
+                               batches=0, edge_util=util,
+                               hot_edge_util=hot_edge_util)
         if with_edge_util:
             return dec, ids, util
         return dec, ids

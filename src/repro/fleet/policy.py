@@ -76,11 +76,13 @@ from repro.core.spaces import (N_PER_USER_ACTIONS, SpaceSpec,
 from repro.fleet import dynamics
 from repro.fleet.population import (FleetTrainResult, adopt_mesh,
                                     check_pad_width, default_actions,
-                                    fleet_bruteforce,
+                                    fleet_bruteforce, fleet_metrics,
                                     nominal_expected_response,
-                                    resolve_source, simulate_responses,
+                                    place_metrics, resolve_source,
+                                    simulate_responses,
                                     train_against_oracle)
-from repro.fleet.replay import replay_init, replay_push, replay_sample
+from repro.fleet.replay import (replay_init, replay_push, replay_sample,
+                                replay_size)
 from repro.fleet.scenarios import FleetConfig, FleetScenario
 from repro.training.optimizer import (apply_updates, constant_lr_adamw,
                                       init_opt_state)
@@ -244,7 +246,7 @@ class FleetDQN:
     def __init__(self, scen, fleet_cfg: Optional[FleetConfig] = None,
                  cfg: Optional[FleetDQNConfig] = None,
                  actions: Optional[np.ndarray] = None, seed: int = 0,
-                 reset_key=None, mesh=None):
+                 reset_key=None, mesh=None, metrics: bool = True):
         """``scen`` is a ``repro.fleet.api.ScenarioSource`` (reset with
         ``reset_key``, default ``PRNGKey(seed)``) — or, equivalently, a
         ``FleetScenario`` plus its ``FleetConfig`` (wrapped into a
@@ -256,7 +258,14 @@ class FleetDQN:
         stream shards along the fleet axis, the replay ring splits its
         slot blocks across devices (see ``shard.shard_replay`` — push/
         sample reshard inside the scan), and the mini-batch loss mean
-        becomes the partitioner's cross-device gradient reduction."""
+        becomes the partitioner's cross-device gradient reduction.
+
+        ``metrics`` (default on) rides a ``repro.obs`` accumulator in
+        the scan carry — per-step reward / response time / loss /
+        replay occupancy / epsilon with zero host syncs; read it via
+        ``metrics_summary``. Recording consumes no RNG and never feeds
+        back into training, so trajectories are bit-identical with it
+        on or off."""
         self.cfg = cfg or FleetDQNConfig()
         scen, self.source = resolve_source(scen, fleet_cfg, seed, reset_key)
         self.fleet_cfg = getattr(self.source, "cfg", None)
@@ -290,22 +299,26 @@ class FleetDQN:
                                   action_shape=(users,))
         self.scen = scen
         self.counts = jnp.zeros((scen.cells, 2), jnp.int32)
+        self.metrics = fleet_metrics(scen.cells, "dqn") if metrics else None
         if self.mesh is not None:
             from repro.fleet import shard
             self.params = shard.replicate(self.params, self.mesh)
             self.opt = shard.replicate(self.opt, self.mesh)
             self.buffer = shard.shard_replay(self.buffer, self.mesh)
             self.counts = shard.shard_array(self.counts, self.mesh)
+            self.metrics = place_metrics(self.metrics, self.mesh)
         self.eps = self.cfg.eps_start
         self.steps = 0
         # one greedy/act/step closure each, threaded through the jitted
         # entry points so step() and run()'s scan body cannot diverge;
-        # donate params/opt/replay so the scan updates them in place
+        # donate params/opt/replay (and the metrics accumulator riding
+        # with them) so the scan updates them in place
         greedy = self._make_greedy()
         step = self._make_step(self._make_act(greedy))
-        self._step = jax.jit(step, donate_argnums=(0, 1, 2))
-        self._run = jax.jit(self._make_run(step), static_argnums=(7,),
-                            donate_argnums=(0, 1, 2))
+        don = (0, 1, 2) if self.metrics is None else (0, 1, 2, 3)
+        self._step = jax.jit(step, donate_argnums=don)
+        self._run = jax.jit(self._make_run(step), static_argnums=(8,),
+                            donate_argnums=don)
         self._greedy = jax.jit(greedy)
 
     @property
@@ -416,7 +429,7 @@ class FleetDQN:
         advance = self.source.step          # jit-pure ScenarioSource step
         train_step = self._make_train_step()
 
-        def step(params, opt, buf, counts, scen, eps, key):
+        def step(params, opt, buf, mets, counts, scen, eps, key):
             k_act, k_noise, k_scen, k_samp = jax.random.split(key, 4)
             s = encode_fleet_state(counts, scen)
             a = act(params, counts, scen, eps, k_act)       # (cells, N)
@@ -433,9 +446,15 @@ class FleetDQN:
             # reported reward stays the env's floored Eq.-4 reward
             r = dynamics.reward(mean_ms, acc, cfg.accuracy_threshold,
                                 xp=jnp)
+            if mets is not None:       # trace-time constant, no host sync
+                fill = (replay_size(buf).astype(jnp.float32)
+                        / buf.capacity)
+                mets = mets.update({"reward": r, "mean_ms": mean_ms,
+                                    "loss": loss, "replay_fill": fill,
+                                    "epsilon": eps})
             info = {"mean_ms": mean_ms, "mean_acc": acc, "reward": r,
                     "loss": loss}
-            return params, opt, buf, counts2, scen2, info
+            return params, opt, buf, mets, counts2, scen2, info
 
         return step
 
@@ -444,19 +463,19 @@ class FleetDQN:
         ONE jitted lax.scan call — no host sync inside the scan."""
         decay, eps_min = self.cfg.eps_decay, self.cfg.eps_min
 
-        def run(params, opt, buf, counts, scen, eps, key, n):
+        def run(params, opt, buf, mets, counts, scen, eps, key, n):
             def body(carry, _):
-                params, opt, buf, counts, scen, eps, key = carry
+                params, opt, buf, mets, counts, scen, eps, key = carry
                 key, k = jax.random.split(key)
-                params, opt, buf, counts, scen, info = step(
-                    params, opt, buf, counts, scen, eps, k)
+                params, opt, buf, mets, counts, scen, info = step(
+                    params, opt, buf, mets, counts, scen, eps, k)
                 eps = jnp.maximum(eps_min, eps * (1.0 - decay))
-                return (params, opt, buf, counts, scen, eps, key), (
+                return (params, opt, buf, mets, counts, scen, eps, key), (
                     info["mean_ms"].mean(), info["mean_acc"].mean(),
                     info["loss"])
             carry, traces = jax.lax.scan(
-                body, (params, opt, buf, counts, scen, eps, key), None,
-                length=n)
+                body, (params, opt, buf, mets, counts, scen, eps, key),
+                None, length=n)
             return carry, traces
 
         return run
@@ -465,9 +484,10 @@ class FleetDQN:
     def step(self):
         """Advance every cell by one step + one pooled-replay update."""
         self.key, k = jax.random.split(self.key)
-        (self.params, self.opt, self.buffer, self.counts, self.scen,
-         info) = self._step(self.params, self.opt, self.buffer, self.counts,
-                            self.scen, self.eps, k)
+        (self.params, self.opt, self.buffer, self.metrics, self.counts,
+         self.scen, info) = self._step(self.params, self.opt, self.buffer,
+                                       self.metrics, self.counts,
+                                       self.scen, self.eps, k)
         self.eps = max(self.cfg.eps_min,
                        self.eps * (1.0 - self.cfg.eps_decay))
         self.steps += 1
@@ -478,13 +498,18 @@ class FleetDQN:
         Returns per-step fleet-mean (ms, accuracy) traces of shape (n,)."""
         self.key, k = jax.random.split(self.key)
         carry, (ms, acc, _loss) = self._run(
-            self.params, self.opt, self.buffer, self.counts, self.scen,
-            self.eps, k, n)
-        (self.params, self.opt, self.buffer, self.counts, self.scen,
-         eps, _) = carry
+            self.params, self.opt, self.buffer, self.metrics, self.counts,
+            self.scen, self.eps, k, n)
+        (self.params, self.opt, self.buffer, self.metrics, self.counts,
+         self.scen, eps, _) = carry
         self.eps = float(eps)
         self.steps += n
         return np.asarray(ms), np.asarray(acc)
+
+    def metrics_summary(self):
+        """Host-side summary of the in-scan telemetry (``None`` when the
+        agent was built with ``metrics=False``)."""
+        return None if self.metrics is None else self.metrics.summary()
 
     def _check_width(self, scen: FleetScenario) -> None:
         """The feature layout (and the 'cell' net's input width) is tied

@@ -37,6 +37,45 @@ import numpy as np
 from repro.core.spaces import SpaceSpec, restricted_actions
 from repro.fleet import dynamics, topology
 from repro.fleet.scenarios import FleetConfig, FleetScenario
+from repro.obs.metrics import MetricDef, MetricsAccumulator
+
+
+def fleet_metrics(cells: int, kind: str = "tabular") -> MetricsAccumulator:
+    """The standard in-scan telemetry pack of the fleet agents.
+
+    Per-cell signals use ``lanes=cells`` so every accumulator update is
+    elementwise along the fleet axis — the mechanism that keeps sharded
+    training bit-identical to single-device (see ``repro.obs.metrics``).
+    Histogram ranges come from the dynamics invariants: rewards live in
+    ``[-MAX_RESPONSE_MS/1000, 0]`` and response times in
+    ``[0, MAX_RESPONSE_MS]``; out-of-range values clip into edge bins
+    without corrupting the exact moments.
+    """
+    r_floor = -dynamics.MAX_RESPONSE_MS / 1000.0
+    defs = {
+        "reward": MetricDef(lo=r_floor, hi=0.0, lanes=cells),
+        "mean_ms": MetricDef(lo=0.0, hi=dynamics.MAX_RESPONSE_MS,
+                             lanes=cells),
+        "epsilon": MetricDef(lo=0.0, hi=1.0),
+    }
+    if kind == "tabular":
+        defs["td_abs"] = MetricDef(lo=0.0, hi=-r_floor, lanes=cells)
+    elif kind == "dqn":
+        defs["loss"] = MetricDef(lo=0.0, hi=25.0)
+        defs["replay_fill"] = MetricDef(lo=0.0, hi=1.0)
+    else:
+        raise ValueError(f"unknown metrics kind {kind!r}")
+    return MetricsAccumulator.create(defs)
+
+
+def place_metrics(mets, mesh):
+    """Shard an agent's accumulator like its other carries: per-cell
+    lanes along the fleet axis, histograms/scalars replicated."""
+    if mets is None or mesh is None:
+        return mets
+    from repro.fleet import shard
+    return mets.place(lambda x: shard.shard_array(x, mesh),
+                      lambda x: shard.replicate(x, mesh))
 
 
 def check_pad_width(n_users: int, scen: FleetScenario, who: str) -> None:
@@ -193,7 +232,7 @@ class FleetQLearning:
     def __init__(self, scen, fleet_cfg: Optional[FleetConfig] = None,
                  cfg: Optional[FleetQConfig] = None,
                  actions: Optional[np.ndarray] = None, seed: int = 0,
-                 reset_key=None, mesh=None):
+                 reset_key=None, mesh=None, metrics: bool = True):
         """``scen`` is a ``repro.fleet.api.ScenarioSource`` (reset with
         ``reset_key``, default ``PRNGKey(seed)``) — or, equivalently, a
         ``FleetScenario`` plus its ``FleetConfig`` (wrapped into a
@@ -203,7 +242,13 @@ class FleetQLearning:
         source's own mesh, if any) shards the per-cell Q-table, job
         counts, and scenario along the fleet axis — the TD update is
         per-cell, so training never leaves the shard, bit-identical to
-        the single-device path."""
+        the single-device path.
+
+        ``metrics`` (default on) rides a ``repro.obs`` accumulator in
+        the scan carry — per-step reward / response time / |TD| /
+        epsilon with zero host syncs; read it via ``metrics_summary``.
+        Recording consumes no RNG and never feeds back into training,
+        so trajectories are bit-identical with it on or off."""
         self.cfg = cfg or FleetQConfig()
         scen, self.source = resolve_source(scen, fleet_cfg, seed, reset_key)
         self.fleet_cfg = getattr(self.source, "cfg", None)
@@ -222,18 +267,23 @@ class FleetQLearning:
                            jnp.float32)
         self.scen = scen
         self.counts = jnp.zeros((scen.cells, 2), jnp.int32)
+        self.metrics = fleet_metrics(scen.cells, "tabular") if metrics \
+            else None
         if self.mesh is not None:
             from repro.fleet import shard
             self.q = shard.shard_array(self.q, self.mesh)
             self.counts = shard.shard_array(self.counts, self.mesh)
+            self.metrics = place_metrics(self.metrics, self.mesh)
         self.eps = self.cfg.eps_start
         self.key = jax.random.PRNGKey(seed)
         self.steps = 0
-        # donate the Q-table: the scatter-add then runs in place instead of
-        # copying the whole (cells, S, K) buffer every step (~30 ms at 36 MB)
-        self._step = jax.jit(self._make_step(), donate_argnums=(0,))
-        self._run = jax.jit(self._make_run(), static_argnums=(5,),
-                            donate_argnums=(0,))
+        # donate the Q-table (and the metrics accumulator riding with it):
+        # the scatter-add then runs in place instead of copying the whole
+        # (cells, S, K) buffer every step (~30 ms at 36 MB)
+        don = (0,) if self.metrics is None else (0, 1)
+        self._step = jax.jit(self._make_step(), donate_argnums=don)
+        self._run = jax.jit(self._make_run(), static_argnums=(6,),
+                            donate_argnums=don)
         self._greedy = jax.jit(self._make_greedy())
 
     # ------------------------------------------------------------------
@@ -251,7 +301,7 @@ class FleetQLearning:
         advance = self.source.step          # jit-pure ScenarioSource step
         n_actions = self.n_actions
 
-        def step(q, counts, scen, eps, key):
+        def step(q, mets, counts, scen, eps, key):
             cells = jnp.arange(q.shape[0])
             k_exp, k_noise, k_scen = jax.random.split(key, 3)
             s = self._state_index(counts, scen)
@@ -275,8 +325,11 @@ class FleetQLearning:
             s2 = self._state_index(counts2, scen2)
             td = r + cfg.gamma * q[cells, s2].max(-1) - q[cells, s, a]
             q = q.at[cells, s, a].add(cfg.alpha * td)
+            if mets is not None:       # trace-time constant, no host sync
+                mets = mets.update({"reward": r, "mean_ms": mean_ms,
+                                    "td_abs": jnp.abs(td), "epsilon": eps})
             info = {"mean_ms": mean_ms, "mean_acc": acc, "reward": r}
-            return q, counts2, scen2, info
+            return q, mets, counts2, scen2, info
 
         return step
 
@@ -286,16 +339,17 @@ class FleetQLearning:
         step = self._make_step()
         decay, eps_min = self.cfg.eps_decay, self.cfg.eps_min
 
-        def run(q, counts, scen, eps, key, n):
+        def run(q, mets, counts, scen, eps, key, n):
             def body(carry, _):
-                q, counts, scen, eps, key = carry
+                q, mets, counts, scen, eps, key = carry
                 key, k = jax.random.split(key)
-                q, counts, scen, info = step(q, counts, scen, eps, k)
+                q, mets, counts, scen, info = step(q, mets, counts, scen,
+                                                   eps, k)
                 eps = jnp.maximum(eps_min, eps * (1.0 - decay))
-                return (q, counts, scen, eps, key), (info["mean_ms"].mean(),
-                                                     info["mean_acc"].mean())
+                return ((q, mets, counts, scen, eps, key),
+                        (info["mean_ms"].mean(), info["mean_acc"].mean()))
             carry, (ms, acc) = jax.lax.scan(
-                body, (q, counts, scen, eps, key), None, length=n)
+                body, (q, mets, counts, scen, eps, key), None, length=n)
             return carry, ms, acc
 
         return run
@@ -303,8 +357,8 @@ class FleetQLearning:
     def step(self):
         """Advance every cell by one environment step (one jitted call)."""
         self.key, k = jax.random.split(self.key)
-        self.q, self.counts, self.scen, info = self._step(
-            self.q, self.counts, self.scen, self.eps, k)
+        self.q, self.metrics, self.counts, self.scen, info = self._step(
+            self.q, self.metrics, self.counts, self.scen, self.eps, k)
         self.eps = max(self.cfg.eps_min,
                        self.eps * (1.0 - self.cfg.eps_decay))
         self.steps += 1
@@ -314,11 +368,17 @@ class FleetQLearning:
         """Advance every cell by ``n`` steps inside one jitted scan.
         Returns per-step fleet-mean (ms, accuracy) traces of shape (n,)."""
         self.key, k = jax.random.split(self.key)
-        (self.q, self.counts, self.scen, eps, _), ms, acc = self._run(
-            self.q, self.counts, self.scen, self.eps, k, n)
+        (self.q, self.metrics, self.counts, self.scen, eps, _), ms, acc = \
+            self._run(self.q, self.metrics, self.counts, self.scen,
+                      self.eps, k, n)
         self.eps = float(eps)
         self.steps += n
         return np.asarray(ms), np.asarray(acc)
+
+    def metrics_summary(self):
+        """Host-side summary of the in-scan telemetry (``None`` when the
+        agent was built with ``metrics=False``)."""
+        return None if self.metrics is None else self.metrics.summary()
 
     # ------------------------------------------------------------------
     def _make_greedy(self):
@@ -448,12 +508,17 @@ def train_against_oracle(agent, max_steps: int, check_every: int = 200,
     if opt_ms is None:                       # dynamic fleet, loop never ran
         opt_ms = np.asarray(fleet_bruteforce(
             agent.scen, agent.pu_table, threshold)[0])
+    from repro.obs.report import run_manifest
+    wall = time.perf_counter() - t0
     return FleetTrainResult(
         converged_at=converged_at, steps=agent.steps,
         frac_converged=float((converged_at >= 0).mean()),
         optimal_ms=np.asarray(opt_ms), greedy_ms=np.asarray(g_ms),
         greedy_acc=np.asarray(g_acc), history=history,
-        wall_seconds=time.perf_counter() - t0)
+        wall_seconds=wall,
+        manifest=run_manifest(config=agent.cfg,
+                              mesh=getattr(agent, "mesh", None),
+                              wall_seconds=wall, steps=agent.steps))
 
 
 @dataclasses.dataclass
@@ -466,6 +531,8 @@ class FleetTrainResult:
     greedy_acc: np.ndarray           # (cells,)
     history: list
     wall_seconds: float
+    #: provenance stamp (repro.obs.report.run_manifest) for this run
+    manifest: Optional[dict] = None
 
     @property
     def cells_per_second(self) -> float:

@@ -1,0 +1,31 @@
+"""repro.obs — observability for the fleet reproduction.
+
+Three independent seams, all optional and all zero-cost when unused:
+
+* :mod:`repro.obs.metrics` — ``MetricsAccumulator``, a jit-safe pytree
+  of count/sum/sumsq/min/max + fixed-bin histograms that rides inside
+  the ``lax.scan`` carry of fleet training loops with zero host syncs.
+* :mod:`repro.obs.spans` — ``SpanRecorder``, a host-side span recorder
+  emitting Chrome-trace/Perfetto JSON, wrapping
+  ``jax.profiler.TraceAnnotation`` so device work nests under spans.
+* :mod:`repro.obs.report` — ``run_manifest``/``attach_manifest``, the
+  provenance stamp (git SHA, jax version, mesh shape, config hash)
+  attached to bench JSONs and training results.
+
+The package imports only jax/numpy/stdlib; every other layer may import
+it (see docs/ARCHITECTURE.md layering rules).
+"""
+from repro.obs.metrics import MetricDef, MetricsAccumulator
+from repro.obs.report import attach_manifest, config_hash, run_manifest
+from repro.obs.spans import SpanRecorder, span, validate_chrome_trace
+
+__all__ = [
+    "MetricDef",
+    "MetricsAccumulator",
+    "SpanRecorder",
+    "attach_manifest",
+    "config_hash",
+    "run_manifest",
+    "span",
+    "validate_chrome_trace",
+]

@@ -1,0 +1,239 @@
+"""In-scan metrics: a jit-safe pytree accumulator with exact merges.
+
+``MetricsAccumulator`` lives inside the ``lax.scan`` carry of the fleet
+training loops (``FleetQLearning.run``, ``FleetDQN.run``), so telemetry
+is recorded at full device speed with **zero host syncs** — nothing is
+fetched until :meth:`MetricsAccumulator.summary` is called on the host.
+
+Design constraints, in order:
+
+1. *Bit-identical under sharding.* The fleet parity discipline
+   (``fleet.shard``, CHANGES.md) only holds for per-cell elementwise
+   work plus integer cross-device sums. Each metric therefore carries a
+   ``lanes`` axis (lanes = cells for per-cell signals): updates are
+   elementwise along lanes, histograms are integer scatter-adds, and
+   the only cross-lane reduction — producing the scalar mean/std/min/
+   max — happens host-side in float64 numpy at ``summary()`` time.
+   A sharded accumulator (lane leaves sharded along the fleet axis via
+   :meth:`place`) is bit-identical to the single-device one.
+2. *Plain merge.* ``merge`` is plain ``+`` on count/total/sumsq/hist
+   and ``min``/``max`` on extrema — associative, and exact on the
+   integer leaves and extrema, which is what lets the partitioner (or a
+   host loop over shards) reduce accumulators freely; float sums carry
+   the usual reassociation ULPs across *different* chunkings.
+3. *Fixed shapes.* Every leaf has a static shape, so the accumulator
+   scans and donates like the Q-table / replay buffer it travels with.
+
+Values outside ``[lo, hi)`` clip into the edge bins of the histogram
+(they still count exactly toward count/total/sumsq/min/max), so a
+mis-estimated range degrades the histogram, never the moments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricDef:
+    """Static description of one metric stream.
+
+    lo/hi  : histogram range (values outside clip into the edge bins)
+    bins   : number of fixed-width histogram bins
+    lanes  : independent accumulation lanes. Use ``lanes=cells`` for
+             per-cell signals so updates stay elementwise along the
+             fleet axis (the sharding-exactness mechanism); ``lanes=1``
+             for scalars like epsilon.
+    """
+    lo: float = 0.0
+    hi: float = 1.0
+    bins: int = 32
+    lanes: int = 1
+
+    def __post_init__(self):
+        if not self.hi > self.lo:
+            raise ValueError(f"MetricDef needs hi > lo, got [{self.lo}, {self.hi})")
+        if self.bins < 1 or self.lanes < 1:
+            raise ValueError("MetricDef needs bins >= 1 and lanes >= 1")
+
+
+_LANE_LEAVES = ("count", "total", "sumsq", "mn", "mx")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MetricsAccumulator:
+    """A dict of named metric streams as a registered pytree.
+
+    Per metric the leaves are::
+
+        count : (lanes,) i32   samples per lane
+        total : (lanes,) f32   sum per lane
+        sumsq : (lanes,) f32   sum of squares per lane
+        mn/mx : (lanes,) f32   running extrema (+inf / -inf when empty)
+        hist  : (bins,)  i32   fixed-bin histogram over all lanes
+
+    ``data`` maps name -> leaf dict; ``defs`` (static aux data) maps
+    name -> :class:`MetricDef`.
+    """
+    data: Dict[str, Dict[str, jnp.ndarray]]
+    defs: Dict[str, MetricDef]
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.data))
+        children = tuple(self.data[n] for n in names)
+        return children, (names, tuple((n, self.defs[n]) for n in names))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        names, defs = aux
+        return cls(dict(zip(names, children)), dict(defs))
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def create(cls, defs: Mapping[str, MetricDef]) -> "MetricsAccumulator":
+        data = {}
+        for name, df in defs.items():
+            data[name] = {
+                "count": jnp.zeros((df.lanes,), jnp.int32),
+                "total": jnp.zeros((df.lanes,), jnp.float32),
+                "sumsq": jnp.zeros((df.lanes,), jnp.float32),
+                "mn": jnp.full((df.lanes,), jnp.inf, jnp.float32),
+                "mx": jnp.full((df.lanes,), -jnp.inf, jnp.float32),
+                "hist": jnp.zeros((df.bins,), jnp.int32),
+            }
+        return cls(data, dict(defs))
+
+    # -- accumulation (pure; jit/scan/donation friendly) -----------------
+    def update(self, values: Mapping[str, jnp.ndarray]) -> "MetricsAccumulator":
+        """Fold one observation per metric into a new accumulator.
+
+        Each value is reshaped to ``(lanes, k)``; the ``k`` samples per
+        lane fold elementwise into that lane. With ``k == 1`` (the fleet
+        training case) the per-lane update is a single elementwise
+        add/min/max — exactly the op class the sharding parity relies
+        on. Metrics not named in ``values`` pass through unchanged, so
+        the pytree structure is stable under jit.
+        """
+        data = dict(self.data)
+        for name, val in values.items():
+            if name not in data:
+                raise KeyError(f"unknown metric {name!r}; have {sorted(data)}")
+            df = self.defs[name]
+            x = jnp.asarray(val, jnp.float32)
+            if x.size % df.lanes:
+                raise ValueError(
+                    f"metric {name!r}: value of size {x.size} does not "
+                    f"split into {df.lanes} lanes")
+            x = x.reshape(df.lanes, -1)
+            k = x.shape[1]
+            d = data[name]
+            scale = df.bins / (df.hi - df.lo)
+            idx = jnp.clip(((x - df.lo) * scale).astype(jnp.int32),
+                           0, df.bins - 1)
+            data[name] = {
+                "count": d["count"] + jnp.int32(k),
+                "total": d["total"] + x.sum(-1),
+                "sumsq": d["sumsq"] + (x * x).sum(-1),
+                "mn": jnp.minimum(d["mn"], x.min(-1)),
+                "mx": jnp.maximum(d["mx"], x.max(-1)),
+                "hist": d["hist"].at[idx.ravel()].add(1),
+            }
+        return MetricsAccumulator(data, self.defs)
+
+    def merge(self, other: "MetricsAccumulator") -> "MetricsAccumulator":
+        """Associative combine: sum / sum / min / max / sum.
+
+        Merging chunked accumulators equals single-stream accumulation
+        exactly on the integer leaves (count, hist) and the extrema;
+        the float total/sumsq agree up to summation-reassociation ULPs
+        — the same caveat CHANGES.md documents for eager-vs-jit. The
+        *sharded-vs-single-device* guarantee is stronger (bit-identical)
+        because there the program and its reduction order are identical,
+        only the layout differs.
+        """
+        if self.defs != other.defs:
+            raise ValueError("cannot merge accumulators with different specs")
+        data = {}
+        for name, d in self.data.items():
+            o = other.data[name]
+            data[name] = {
+                "count": d["count"] + o["count"],
+                "total": d["total"] + o["total"],
+                "sumsq": d["sumsq"] + o["sumsq"],
+                "mn": jnp.minimum(d["mn"], o["mn"]),
+                "mx": jnp.maximum(d["mx"], o["mx"]),
+                "hist": d["hist"] + o["hist"],
+            }
+        return MetricsAccumulator(data, self.defs)
+
+    # -- placement -------------------------------------------------------
+    def place(self, shard_fn: Callable, replicate_fn: Callable
+              ) -> "MetricsAccumulator":
+        """Place leaves for sharded training.
+
+        Lane leaves of multi-lane metrics (lanes = cells) go through
+        ``shard_fn`` (shard along the fleet axis); histograms and
+        single-lane leaves go through ``replicate_fn``. With this
+        placement the jitted update partitions into per-device
+        elementwise work plus an integer scatter — bit-identical to the
+        single-device program.
+        """
+        data = {}
+        for name, d in self.data.items():
+            lane_fn = shard_fn if self.defs[name].lanes > 1 else replicate_fn
+            data[name] = {
+                k: (replicate_fn(v) if k == "hist" else lane_fn(v))
+                for k, v in d.items()
+            }
+        return MetricsAccumulator(data, dict(self.defs))
+
+    # -- host-side reporting ---------------------------------------------
+    def summary(self) -> Dict[str, dict]:
+        """Fetch + reduce on the host (the only device->host transfer).
+
+        Cross-lane reduction happens here in float64 numpy, keeping the
+        device program free of float cross-device reductions.
+        """
+        out = {}
+        for name, d in self.data.items():
+            df = self.defs[name]
+            count = np.asarray(d["count"], np.int64)
+            total = np.asarray(d["total"], np.float64)
+            sumsq = np.asarray(d["sumsq"], np.float64)
+            n = int(count.sum())
+            entry = {
+                "count": n,
+                "lanes": df.lanes,
+                "hist": [int(v) for v in np.asarray(d["hist"])],
+                "edges": [float(v) for v in
+                          np.linspace(df.lo, df.hi, df.bins + 1)],
+            }
+            if n:
+                mean = float(total.sum() / n)
+                var = max(float(sumsq.sum() / n) - mean * mean, 0.0)
+                valid = count > 0
+                entry.update(
+                    mean=mean,
+                    std=math.sqrt(var),
+                    min=float(np.asarray(d["mn"])[valid].min()),
+                    max=float(np.asarray(d["mx"])[valid].max()),
+                )
+            else:
+                entry.update(mean=None, std=None, min=None, max=None)
+            out[name] = entry
+        return out
+
+    def lane_means(self, name: str) -> np.ndarray:
+        """Per-lane means (NaN for empty lanes) — e.g. per-cell reward."""
+        d = self.data[name]
+        count = np.asarray(d["count"], np.float64)
+        total = np.asarray(d["total"], np.float64)
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return total / np.where(count > 0, count, np.nan)

@@ -1,0 +1,98 @@
+"""Run manifests: provenance stamped onto bench JSONs and train results.
+
+A manifest answers "what produced this number?" — git SHA (+dirty
+flag), jax/jaxlib versions, backend and device count, mesh shape,
+a stable hash of the config, and wall-clock context. It is attached to
+every ``benchmarks/run.py --json`` payload (via ``benchmarks.common.
+save_json``) and to ``FleetTrainResult``; ``tools/obsview.py`` reads it
+back to pretty-print or diff runs.
+
+Everything here is fault-tolerant: a missing git binary or a non-repo
+checkout yields ``None`` fields, never an exception — provenance must
+not take down a benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import platform
+import subprocess
+import sys
+from datetime import datetime, timezone
+from typing import Any, Optional
+
+import jax
+
+MANIFEST_SCHEMA = "repro.obs/manifest-v1"
+
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def config_hash(config: Any) -> str:
+    """Stable short hash of a config (dataclass, dict, or anything with
+    a deterministic repr via ``default=str``)."""
+    if dataclasses.is_dataclass(config) and not isinstance(config, type):
+        config = dataclasses.asdict(config)
+    blob = json.dumps(config, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _git(*args: str) -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ("git", "-C", _REPO_ROOT) + args,
+            capture_output=True, text=True, timeout=10)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    return out.stdout.strip() if out.returncode == 0 else None
+
+
+def git_info() -> dict:
+    sha = _git("rev-parse", "HEAD")
+    status = _git("status", "--porcelain")
+    return {
+        "sha": sha,
+        "branch": _git("rev-parse", "--abbrev-ref", "HEAD"),
+        "dirty": bool(status) if status is not None else None,
+    }
+
+
+def run_manifest(config: Any = None, mesh=None, **extra) -> dict:
+    """The provenance stamp. ``mesh`` is a ``jax.sharding.Mesh`` (or
+    None); ``extra`` keys (e.g. ``wall_seconds=...``) merge in last."""
+    try:
+        import jaxlib
+        jaxlib_version = getattr(jaxlib, "__version__", None)
+    except ImportError:
+        jaxlib_version = None
+    m = {
+        "schema": MANIFEST_SCHEMA,
+        "created_utc": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+        "git": git_info(),
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib_version,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kinds": sorted({d.device_kind for d in jax.devices()}),
+        "mesh_shape": ({str(k): int(v) for k, v in dict(mesh.shape).items()}
+                       if mesh is not None else None),
+        "config_hash": config_hash(config) if config is not None else None,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "argv": list(sys.argv),
+    }
+    m.update(extra)
+    return m
+
+
+def attach_manifest(payload: dict, config: Any = None, mesh=None,
+                    **extra) -> dict:
+    """Return a copy of ``payload`` with a ``manifest`` key added; the
+    input dict is not mutated."""
+    out = dict(payload)
+    out["manifest"] = run_manifest(config=config, mesh=mesh, **extra)
+    return out

@@ -3,6 +3,7 @@ so the jitted prefill/decode executables are reused across traffic."""
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 import numpy as np
@@ -14,10 +15,14 @@ class Request:
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int = 16
     user: int = 0                   # originating end-node (orchestration)
+    # host perf_counter stamp; the batcher sets it at submit() if unset,
+    # so queue_time below is measurable without caller cooperation
     arrival_time: float = 0.0
     # filled by the engine:
     output: Optional[np.ndarray] = None
-    response_time: float = 0.0
+    response_time: float = 0.0      # emulated batch wall (s, /compute_scale)
+    queue_time: float = 0.0         # submit -> batch-drain wait (s)
+    serve_time: float = 0.0         # raw host wall of the serve call (s)
 
 
 class RequestBatcher:
@@ -29,6 +34,8 @@ class RequestBatcher:
         self.queue: List[Request] = []
 
     def submit(self, req: Request):
+        if not req.arrival_time:
+            req.arrival_time = time.perf_counter()
         self.queue.append(req)
 
     def _bucket(self, n: int) -> int:

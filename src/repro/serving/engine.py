@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.spans import span as _span
 from repro.serving.batching import Request, RequestBatcher
 
 
@@ -39,32 +40,50 @@ class ServingEngine:
         self._compiled[(batch, prompt_len)] = True
 
     def generate(self, tokens: np.ndarray, max_new_tokens: int = 16,
-                 greedy: bool = True):
-        """tokens: (B, S) int32 -> (out_tokens (B, N), wall_seconds)."""
-        t0 = time.perf_counter()
-        toks = jnp.asarray(tokens, jnp.int32)
-        logits, cache = self._prefill(self.params, {"tokens": toks})
-        outs = []
-        cur = jnp.argmax(logits[:, -1:, : self.model.cfg.vocab_size], -1)
-        cur = cur.astype(jnp.int32)
-        for _ in range(max_new_tokens):
-            outs.append(cur)
-            logits, cache = self._decode(self.params, cache, cur)
-            cur = jnp.argmax(logits[:, -1:, : self.model.cfg.vocab_size],
-                             -1).astype(jnp.int32)
-        out = jnp.concatenate(outs, axis=1)
-        out.block_until_ready()
-        wall = (time.perf_counter() - t0) / self.compute_scale
+                 greedy: bool = True, spans=None):
+        """tokens: (B, S) int32 -> (out_tokens (B, N), wall_seconds).
+
+        ``spans`` (a ``repro.obs.spans.SpanRecorder``) wraps the call in
+        ``engine.generate`` / ``engine.prefill`` / ``engine.decode``
+        spans; the timed wall is unchanged (spans stamp the same host
+        clock around the same work)."""
+        with _span(spans, "engine.generate", batch=int(tokens.shape[0]),
+                   prompt_len=int(tokens.shape[1]),
+                   new_tokens=max_new_tokens,
+                   compute_scale=self.compute_scale):
+            t0 = time.perf_counter()
+            toks = jnp.asarray(tokens, jnp.int32)
+            with _span(spans, "engine.prefill"):
+                logits, cache = self._prefill(self.params, {"tokens": toks})
+            outs = []
+            cur = jnp.argmax(logits[:, -1:, : self.model.cfg.vocab_size], -1)
+            cur = cur.astype(jnp.int32)
+            with _span(spans, "engine.decode", steps=max_new_tokens):
+                for _ in range(max_new_tokens):
+                    outs.append(cur)
+                    logits, cache = self._decode(self.params, cache, cur)
+                    cur = jnp.argmax(
+                        logits[:, -1:, : self.model.cfg.vocab_size],
+                        -1).astype(jnp.int32)
+                out = jnp.concatenate(outs, axis=1)
+                out.block_until_ready()
+            wall = (time.perf_counter() - t0) / self.compute_scale
         return np.asarray(out), wall
 
-    def serve(self, batcher: RequestBatcher):
-        """Drain one batch from the batcher; fills response_time/output."""
+    def serve(self, batcher: RequestBatcher, spans=None):
+        """Drain one batch from the batcher; fills response_time/output
+        plus the queue/serve stamps the obs layer reads."""
+        t_drain = time.perf_counter()
         nxt = batcher.next_batch()
         if nxt is None:
             return []
         reqs, toks, _lens = nxt
-        out, wall = self.generate(toks, max_new_tokens=reqs[0].max_new_tokens)
+        out, wall = self.generate(toks, max_new_tokens=reqs[0].max_new_tokens,
+                                  spans=spans)
+        raw = time.perf_counter() - t_drain
         for i, r in enumerate(reqs):
             r.output = out[i]
             r.response_time = wall
+            r.queue_time = max(0.0, t_drain - r.arrival_time)
+            r.serve_time = raw
         return reqs

@@ -116,8 +116,69 @@ def test_qlearning_training_bit_parity():
     _assert_scen_equal(a.scen, b.scen)
     np.testing.assert_array_equal(np.asarray(a.greedy_decisions()),
                                   np.asarray(b.greedy_decisions()))
+    # the in-scan metrics accumulator (ISSUE-6) rides the same carry.
+    # The accumulator itself adds no cross-lane float ops (see the
+    # standalone test below for its own bit-parity), so integer leaves,
+    # extrema, and histograms are exact; the float total/sumsq record
+    # values like the per-cell mean_ms whose masked-mean arithmetic can
+    # contract (FMA) differently under partitioning — ULP-level, the
+    # same compilation-context caveat CHANGES.md documents for
+    # eager-vs-jit, while the Q-table stays bit-identical above
+    for name, da in a.metrics.data.items():
+        db = b.metrics.data[name]
+        for leaf in ("count", "hist", "mn", "mx"):
+            np.testing.assert_array_equal(np.asarray(da[leaf]),
+                                          np.asarray(db[leaf]))
+        for leaf in ("total", "sumsq"):
+            np.testing.assert_allclose(np.asarray(da[leaf]),
+                                       np.asarray(db[leaf]), rtol=1e-6)
+    sa, sb = a.metrics_summary(), b.metrics_summary()
+    for name in sa:
+        assert sa[name]["count"] == sb[name]["count"]
+        assert sa[name]["hist"] == sb[name]["hist"]
+        assert sa[name]["mean"] == pytest.approx(sb[name]["mean"],
+                                                 rel=1e-6)
     if NDEV > 1:
         assert b.q.sharding.spec[0] == "fleet"       # donation kept layout
+
+
+def test_metrics_accumulator_sharded_update_bit_parity():
+    """Standalone obs satellite: the same jitted update on a placed
+    accumulator (lane leaves sharded along the fleet axis, histograms
+    replicated) is bit-identical to the unplaced one — per-lane
+    elementwise work plus an integer scatter, the op classes the fleet
+    parity discipline allows."""
+    from repro.obs import MetricDef, MetricsAccumulator
+    mesh = _mesh()
+    lanes = 8 * NDEV
+    defs = {"r": MetricDef(lo=-2.5, hi=0.0, bins=16, lanes=lanes),
+            "eps": MetricDef(lo=0.0, hi=1.0, bins=8)}
+    plain = MetricsAccumulator.create(defs)
+    placed = plain.place(lambda x: shard.shard_array(x, mesh),
+                         lambda x: shard.replicate(x, mesh))
+    if NDEV > 1:
+        assert placed.data["r"]["total"].sharding.spec[0] == "fleet"
+        assert placed.data["r"]["hist"].sharding.is_fully_replicated
+
+    @jax.jit
+    def roll(acc, key):
+        def body(carry, k):
+            x = -2.5 * jax.random.uniform(k, (lanes,))
+            e = jax.random.uniform(jax.random.fold_in(k, 1), (1,))
+            return carry.update({"r": x, "eps": e}), None
+        acc, _ = jax.lax.scan(body, acc, jax.random.split(key, 10))
+        return acc
+
+    key = jax.random.PRNGKey(0)
+    a, b = roll(plain, key), roll(placed, key)
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    if NDEV > 1:                                     # layout survived scan
+        assert b.data["r"]["count"].sharding.spec[0] == "fleet"
+    # and merging the two reduces exactly (integer + extrema leaves)
+    m = a.merge(b).summary()["r"]
+    assert m["count"] == 2 * a.summary()["r"]["count"]
 
 
 def test_holdout_reward_ratio_bit_parity():

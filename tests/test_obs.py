@@ -1,0 +1,412 @@
+"""repro.obs (ISSUE-6): host-sync-free fleet telemetry.
+
+Covers: MetricsAccumulator correctness against numpy, chunked-merge
+equality (exact on integer leaves and extrema, ULP-tolerant on float
+sums), histogram merge == concat-then-bin, both agents carrying the
+accumulator inside their jitted scans (counts, epsilon decay, the
+metrics=False escape hatch, and metrics-on/off training bit-identity),
+SpanRecorder + Chrome trace-event schema validation, run manifests,
+hot_edges in RouteResult.summary(), the end-to-end gap_breakdown
+acceptance (both exact sum identities against a real ServingEngine
+batch), and tools/obsview.py via subprocess.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fleet import (FleetConfig, FleetDQN, FleetDQNConfig,
+                        FleetOrchestrator, FleetQLearning, SyntheticSource,
+                        TraceSource, fleet_metrics, mixed_table5_fleet,
+                        topology, train_against_oracle, with_topology)
+from repro.obs import (MetricDef, MetricsAccumulator, SpanRecorder,
+                       attach_manifest, config_hash, run_manifest, span,
+                       validate_chrome_trace)
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+FIXTURE = os.path.join(DATA, "trace_small.npz")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ------------------------------------------------------------ metrics -----
+def _acc():
+    return MetricsAccumulator.create({
+        "r": MetricDef(lo=-2.0, hi=0.0, bins=8, lanes=4),
+        "eps": MetricDef(lo=0.0, hi=1.0, bins=4, lanes=1),
+    })
+
+
+def test_metrics_moments_match_numpy():
+    rng = np.random.default_rng(0)
+    acc = _acc()
+    samples = []
+    for _ in range(7):
+        x = rng.uniform(-2.5, 0.5, size=(4,)).astype(np.float32)
+        samples.append(x)
+        acc = acc.update({"r": jnp.asarray(x)})
+    flat = np.concatenate(samples).astype(np.float64)
+    s = acc.summary()["r"]
+    assert s["count"] == flat.size and s["lanes"] == 4
+    assert s["mean"] == pytest.approx(flat.mean(), rel=1e-6)
+    assert s["std"] == pytest.approx(flat.std(), rel=1e-5)
+    assert s["min"] == pytest.approx(flat.min(), rel=1e-6)
+    assert s["max"] == pytest.approx(flat.max(), rel=1e-6)
+    # out-of-range values clipped into edge bins, mass conserved
+    assert sum(s["hist"]) == s["count"]
+    assert len(s["edges"]) == 8 + 1
+
+
+def test_metrics_histogram_merge_equals_concat_then_bin():
+    rng = np.random.default_rng(1)
+    xs = rng.uniform(-2.2, 0.2, size=(10, 4)).astype(np.float32)
+    a, b = _acc(), _acc()
+    for x in xs[:6]:
+        a = a.update({"r": jnp.asarray(x)})
+    for x in xs[6:]:
+        b = b.update({"r": jnp.asarray(x)})
+    merged = a.merge(b).summary()["r"]
+    ref, _ = np.histogram(np.clip(xs.ravel(), -2.0, np.nextafter(0.0, -1)),
+                          bins=8, range=(-2.0, 0.0))
+    np.testing.assert_array_equal(merged["hist"], ref)
+
+
+def test_metrics_chunked_merge_matches_single_stream():
+    """merge(chunk1, chunk2) == one stream: exact on count/hist/extrema,
+    reassociation-ULP close on the float sums (the CHANGES.md caveat)."""
+    rng = np.random.default_rng(2)
+    xs = [rng.uniform(-2.0, 0.0, size=(4,)).astype(np.float32)
+          for _ in range(9)]
+    one = _acc()
+    for x in xs:
+        one = one.update({"r": jnp.asarray(x)})
+    a, b = _acc(), _acc()
+    for x in xs[:4]:
+        a = a.update({"r": jnp.asarray(x)})
+    for x in xs[4:]:
+        b = b.update({"r": jnp.asarray(x)})
+    m, o = a.merge(b).data["r"], one.data["r"]
+    for leaf in ("count", "hist", "mn", "mx"):
+        np.testing.assert_array_equal(np.asarray(m[leaf]),
+                                      np.asarray(o[leaf]))
+    for leaf in ("total", "sumsq"):
+        np.testing.assert_allclose(np.asarray(m[leaf]),
+                                   np.asarray(o[leaf]), rtol=1e-6)
+
+
+def test_metrics_jit_update_matches_eager():
+    """The scan-carry usage: updates inside jit produce the same leaves
+    as eager updates — including donation-friendly structure stability
+    when only a subset of metrics is named."""
+    x = jnp.asarray([-0.5, -1.0, -1.5, -0.25], jnp.float32)
+
+    def once(acc):
+        return acc.update({"r": x})        # 'eps' passes through
+
+    eager = once(_acc())
+    jitted = jax.jit(once)(_acc())
+    for leaf in ("count", "total", "sumsq", "mn", "mx", "hist"):
+        np.testing.assert_array_equal(np.asarray(eager.data["r"][leaf]),
+                                      np.asarray(jitted.data["r"][leaf]))
+    # untouched metric is bit-identical to the fresh one
+    np.testing.assert_array_equal(np.asarray(jitted.data["eps"]["count"]),
+                                  np.zeros(1, np.int32))
+
+
+def test_metrics_lane_means_and_empty_summary():
+    acc = _acc()
+    s = acc.summary()["r"]
+    assert s["count"] == 0 and s["mean"] is None and s["min"] is None
+    acc = acc.update({"r": jnp.asarray([1.0, 2.0, 3.0, 4.0])})
+    lm = acc.lane_means("r")
+    np.testing.assert_allclose(lm, [1.0, 2.0, 3.0, 4.0])
+    assert np.isnan(acc.lane_means("eps")).all()
+
+
+def test_metrics_errors():
+    with pytest.raises(ValueError, match="hi > lo"):
+        MetricDef(lo=1.0, hi=1.0)
+    with pytest.raises(ValueError, match="bins"):
+        MetricDef(bins=0)
+    acc = _acc()
+    with pytest.raises(KeyError, match="unknown metric"):
+        acc.update({"nope": jnp.zeros(4)})
+    with pytest.raises(ValueError, match="lanes"):
+        acc.update({"r": jnp.zeros(3)})     # 3 does not split into 4 lanes
+    other = MetricsAccumulator.create({"r": MetricDef(lanes=4)})
+    with pytest.raises(ValueError, match="different specs"):
+        acc.merge(other)
+
+
+# ----------------------------------------------- agents carry metrics -----
+def test_qlearning_records_metrics_in_scan():
+    src = TraceSource.load(FIXTURE)
+    agent = FleetQLearning(src, seed=0)
+    steps = 2 * src.horizon
+    agent.run(steps)
+    s = agent.metrics_summary()
+    assert s["reward"]["count"] == src.cells * steps
+    assert s["epsilon"]["count"] == steps            # one lane, one obs/step
+    assert -2.5 <= s["reward"]["min"] <= s["reward"]["max"] <= 0.0
+    # epsilon decays monotonically: max is the first value, min the last
+    assert s["epsilon"]["max"] > s["epsilon"]["min"]
+    assert sum(s["reward"]["hist"]) == s["reward"]["count"]
+    assert agent.metrics.lane_means("reward").shape == (src.cells,)
+
+
+def test_dqn_records_metrics_including_replay_fill():
+    cfg = FleetConfig(cells=8, users=2, arrival_rate=1.0)
+    agent = FleetDQN(SyntheticSource(cfg), cfg=FleetDQNConfig(), seed=0)
+    agent.run(30)
+    s = agent.metrics_summary()
+    assert s["reward"]["count"] == 8 * 30
+    assert s["loss"]["count"] == 30
+    assert 0.0 < s["replay_fill"]["max"] <= 1.0
+    assert s["replay_fill"]["min"] <= s["replay_fill"]["max"]  # fills up
+
+
+def test_metrics_off_is_bit_identical_training():
+    """The accumulator consumes no RNG and feeds nothing back: training
+    with metrics=False is bit-identical, and metrics_summary is None."""
+    src = SyntheticSource(FleetConfig(cells=8, users=2, arrival_rate=1.0))
+    a = FleetQLearning(src, seed=4)
+    b = FleetQLearning(src, seed=4, metrics=False)
+    a.run(30)
+    b.run(30)
+    assert b.metrics is None and b.metrics_summary() is None
+    np.testing.assert_array_equal(np.asarray(a.q), np.asarray(b.q))
+    np.testing.assert_array_equal(np.asarray(a.counts),
+                                  np.asarray(b.counts))
+    da = FleetDQN(src, cfg=FleetDQNConfig(), seed=4)
+    db = FleetDQN(src, cfg=FleetDQNConfig(), seed=4, metrics=False)
+    da.run(25)
+    db.run(25)
+    assert db.metrics_summary() is None
+    for la, lb in zip(jax.tree_util.tree_leaves(da.params),
+                      jax.tree_util.tree_leaves(db.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_fleet_metrics_factory_shapes():
+    m = fleet_metrics(16, "tabular")
+    assert m.defs["reward"].lanes == 16 and "loss" not in m.defs
+    m = fleet_metrics(16, "dqn")
+    assert {"loss", "replay_fill"} <= set(m.defs)
+    with pytest.raises(ValueError, match="kind"):
+        fleet_metrics(16, "nope")
+
+
+def test_train_against_oracle_attaches_manifest():
+    src = TraceSource.load(FIXTURE)
+    agent = FleetQLearning(src, seed=0)
+    res = train_against_oracle(agent, max_steps=src.horizon,
+                               check_every=src.horizon)
+    m = res.manifest
+    assert m["schema"] == "repro.obs/manifest-v1"
+    assert m["jax_version"] == jax.__version__
+    assert m["steps"] == agent.steps > 0
+    assert m["wall_seconds"] == pytest.approx(res.wall_seconds)
+
+
+# -------------------------------------------------------------- spans -----
+def test_span_recorder_nesting_and_durations():
+    rec = SpanRecorder()
+    with rec.span("outer", kind="test"):
+        with rec.span("inner"):
+            pass
+    rec.instant("marker", note="hi")
+    rec.counter("queue", depth=3)
+    names = [e["name"] for e in rec.events]
+    assert names == ["inner", "outer", "marker", "queue"]  # close order
+    outer = next(e for e in rec.events if e["name"] == "outer")
+    inner = next(e for e in rec.events if e["name"] == "inner")
+    assert outer["ts"] <= inner["ts"]
+    assert outer["dur"] >= inner["dur"]
+    assert outer["args"] == {"kind": "test"}
+    assert rec.durations_ms("outer") and rec.durations_ms("nope") == []
+
+
+def test_span_module_helper_none_recorder_is_noop():
+    with span(None, "anything", x=1):
+        pass                                         # no recorder, no-op
+    rec = SpanRecorder()
+    with span(rec, "real"):
+        pass
+    assert [e["name"] for e in rec.events] == ["real"]
+
+
+def test_chrome_trace_save_validate_roundtrip(tmp_path):
+    rec = SpanRecorder()
+    with rec.span("a", obj=object()):                # non-json arg -> str
+        pass
+    path = rec.save(str(tmp_path / "t.json"), manifest=run_manifest())
+    with open(path) as f:
+        trace = json.load(f)
+    validate_chrome_trace(trace)
+    assert trace["displayTimeUnit"] == "ms"
+    assert trace["otherData"]["schema"] == "repro.obs/manifest-v1"
+    e = trace["traceEvents"][0]
+    assert e["ph"] == "X" and e["ts"] >= 0 and e["dur"] >= 0
+    assert isinstance(e["args"]["obj"], str)
+
+
+def test_validate_chrome_trace_rejections():
+    ok = {"traceEvents": [{"name": "x", "ph": "X", "ts": 0.0, "dur": 1.0,
+                           "pid": 1, "tid": 1}]}
+    validate_chrome_trace(ok)
+    with pytest.raises(ValueError, match="must be a dict"):
+        validate_chrome_trace([])
+    with pytest.raises(ValueError, match="must be a list"):
+        validate_chrome_trace({"traceEvents": {}})
+    bad = {"traceEvents": [{"ph": "X", "ts": 0.0}]}
+    with pytest.raises(ValueError, match="name"):
+        validate_chrome_trace(bad)
+    bad = {"traceEvents": [{"name": "x", "ph": "Z", "ts": 0.0,
+                            "pid": 1, "tid": 1}]}
+    with pytest.raises(ValueError, match="bad phase"):
+        validate_chrome_trace(bad)
+    bad = {"traceEvents": [{"name": "x", "ph": "X", "ts": -1.0, "dur": 1.0,
+                            "pid": 1, "tid": 1}]}
+    with pytest.raises(ValueError, match="ts"):
+        validate_chrome_trace(bad)
+    bad = {"traceEvents": [{"name": "x", "ph": "X", "ts": 0.0,
+                            "pid": 1, "tid": 1}]}
+    with pytest.raises(ValueError, match="dur"):
+        validate_chrome_trace(bad)
+
+
+# ----------------------------------------------------------- manifest -----
+def test_run_manifest_keys_and_config_hash():
+    m = run_manifest(config=FleetConfig(cells=4, users=2), extra_key=7)
+    assert m["schema"] == "repro.obs/manifest-v1"
+    assert m["backend"] == jax.default_backend()
+    assert m["device_count"] == jax.device_count()
+    assert m["extra_key"] == 7
+    assert len(m["config_hash"]) == 16
+    # hash is deterministic and config-sensitive
+    assert config_hash(FleetConfig(cells=4, users=2)) == m["config_hash"]
+    assert config_hash(FleetConfig(cells=5, users=2)) != m["config_hash"]
+    assert config_hash({"b": 1, "a": 2}) == config_hash({"a": 2, "b": 1})
+
+
+def test_attach_manifest_does_not_mutate():
+    payload = {"x": 1}
+    out = attach_manifest(payload, wall_seconds=1.0)
+    assert "manifest" not in payload
+    assert out["x"] == 1 and out["manifest"]["wall_seconds"] == 1.0
+
+
+# ------------------------------------------- hot edges + gap breakdown ----
+def _trained_topo_agent():
+    scen = with_topology(mixed_table5_fleet(jax.random.PRNGKey(0), 12, 2),
+                         topology.hot_edge_topology(12, 4))
+    cfg = FleetConfig(cells=12, users=2, arrival_rate=1.5, n_edges=4)
+    agent = FleetQLearning(SyntheticSource(cfg, scen=scen), seed=0)
+    agent.run(40)
+    return agent
+
+
+def test_hot_edges_in_summary():
+    """Satellite: route everything to the edge tier over a
+    hot_edge_topology — half the fleet shares edge 0, so edge 0 is the
+    unique utilization peak; the hot set follows the threshold."""
+    from repro.fleet.api import StaticPolicy
+    scen = with_topology(mixed_table5_fleet(jax.random.PRNGKey(0), 12, 2),
+                         topology.hot_edge_topology(12, 4))
+    orch = FleetOrchestrator(StaticPolicy(users=2, strategy="edge"))
+    res = orch.route(scen=scen, with_edge_util=True, as_result=True,
+                     hot_edge_util=0.5)
+    util = np.asarray(res.edge_util)
+    assert util.argmax() == 0                        # the hot edge
+    s = res.summary()
+    assert s["hot_edge_util"] == 0.5
+    assert s["hot_edges"] == res.hot_edges
+    assert res.hot_edges == [int(i) for i in np.nonzero(util >= 0.5)[0]]
+    assert 0 in res.hot_edges
+    # threshold above the peak -> empty hot set
+    res2 = orch.route(scen=scen, with_edge_util=True, as_result=True,
+                      hot_edge_util=float(util.max()) + 0.01)
+    assert res2.summary()["hot_edges"] == []
+    # a trained agent keeps the tuple contract, util values matching
+    agent_orch = FleetOrchestrator(_trained_topo_agent())
+    r3 = agent_orch.route(with_edge_util=True, as_result=True)
+    dec, ids, util3 = agent_orch.route(with_edge_util=True)
+    np.testing.assert_allclose(np.asarray(util3),
+                               np.asarray(r3.edge_util))
+    assert "hot_edges" not in agent_orch.route(as_result=True).summary()
+
+
+def test_gap_breakdown_end_to_end_with_real_engines():
+    """ISSUE-6 acceptance: gap_breakdown components sum to the measured
+    wall time of a real engine batch — both identities exact."""
+    from repro.launch.serve import build_engines, get_config
+    src = TraceSource.load(FIXTURE)
+    agent = FleetQLearning(src, seed=0)
+    agent.run(src.horizon)
+    engines = build_engines(get_config("edge-ladder"), variants=("d0",),
+                            max_len=48)
+    rec = SpanRecorder()
+    res = FleetOrchestrator(agent).route(
+        dispatch=engines, max_new_tokens=2, batch_size=4, prompt_len=8,
+        spans=rec)
+    gb = res.gap_breakdown()
+    w = gb["wall_ms"]
+    assert w["total"] == pytest.approx(
+        w["batching"] + w["compute"] + w["dispatch"], abs=1e-6)
+    assert w["dispatch"] >= 0.0
+    pr = gb["per_request_ms"]
+    assert pr["e2e"] == pytest.approx(pr["queueing"] + pr["compute"],
+                                      abs=1e-6)
+    assert gb["gap_x"] > 0.0
+    assert gb["gap_components_x"]["e2e"] == pytest.approx(
+        gb["gap_components_x"]["queueing"]
+        + gb["gap_components_x"]["compute"], abs=1e-9)
+    for tv in gb["per_tier_variant"].values():
+        assert tv["gap_x"] > 0.0
+    # per-request identity holds request by request, not just in the mean
+    for r in res.served:
+        assert r.queue_ms >= 0.0
+        assert r.measured_ms >= 0.0
+    # the spans cover the dispatch path
+    names = {e["name"] for e in rec.events}
+    assert {"route.decide", "route.dispatch", "dispatch.batch_build",
+            "engine.generate", "engine.prefill",
+            "engine.decode"} <= names
+    assert any(n.startswith("dispatch.drain.") for n in names)
+    validate_chrome_trace(rec.chrome_trace(run_manifest()))
+    # summary carries the breakdown
+    assert res.summary()["gap_breakdown"]["gap_x"] == gb["gap_x"]
+
+
+def test_gap_breakdown_none_without_dispatch():
+    orch = FleetOrchestrator(_trained_topo_agent())
+    res = orch.route(as_result=True)
+    assert res.gap_breakdown() is None
+    assert "gap_breakdown" not in res.summary()
+
+
+# ------------------------------------------------------------ obsview ----
+def _run_obsview(*args):
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "obsview.py"), *args],
+        capture_output=True, text=True, timeout=60)
+
+
+def test_obsview_show_and_diff(tmp_path):
+    a = tmp_path / "a.json"
+    b = tmp_path / "b.json"
+    a.write_text(json.dumps(attach_manifest(
+        {"x": 1.0, "nested": {"y": 2.0}}, wall_seconds=1.0)))
+    b.write_text(json.dumps(attach_manifest(
+        {"x": 1.5, "nested": {"y": 2.0}}, wall_seconds=2.0)))
+    res = _run_obsview(str(a))
+    assert res.returncode == 0, res.stderr
+    assert "nested.y" in res.stdout and "jax" in res.stdout
+    res = _run_obsview("--diff", str(a), str(b))
+    assert res.returncode == 0, res.stderr
+    assert "+50.0%" in res.stdout and "<--" in res.stdout
+    assert "1 metric(s) moved" in res.stdout

@@ -1,0 +1,137 @@
+"""CI observability smoke: instrumented train + route on tiny budgets.
+
+Four gates (ISSUE 6):
+  1. an instrumented FleetQLearning training run records coherent
+     in-scan metrics (counts match, rewards inside the dynamics range);
+  2. a span-instrumented route(dispatch=real engines) emits trace JSON
+     that passes the Chrome trace-event schema validator and reloads;
+  3. the gap_breakdown components satisfy both exact sum identities
+     (per-request queueing+compute == e2e; wall batching+compute+
+     dispatch == total);
+  4. metrics overhead: instrumented vs uninstrumented FleetDQN RL-loop
+     throughput < OVERHEAD_GATE, best-of-N with retries so CI timer
+     noise doesn't flake the gate. The budget (128 cells, chunk 200)
+     is the smallest where per-chunk host dispatch is amortized; at
+     --tiny scale (16 cells, chunk 20) dispatch dominates the step and
+     the ratio measures Python overhead, not the accumulator.
+
+Usage:  PYTHONPATH=src python tools/obs_smoke.py [--skip-overhead]
+Exit 1 on the first failed gate.
+"""
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+OVERHEAD_GATE = 1.05      # uninstrumented/instrumented steps-per-s
+TRACE_PATH = os.path.join(ROOT, "results", "obs_trace_smoke.json")
+
+
+def check(name: str, ok: bool, detail: str = "") -> None:
+    print(f"[obs_smoke] {'ok  ' if ok else 'FAIL'} {name}"
+          f"{' — ' + detail if detail else ''}", flush=True)
+    if not ok:
+        sys.exit(1)
+
+
+def train_and_route():
+    import numpy as np
+    from repro.fleet.api import FleetOrchestrator, TraceSource
+    from repro.fleet.dynamics import MAX_RESPONSE_MS
+    from repro.fleet.population import FleetQLearning
+    from repro.launch.serve import build_engines, get_config
+    from repro.obs import SpanRecorder, run_manifest, validate_chrome_trace
+
+    src = TraceSource.load(os.path.join(ROOT, "tests", "data",
+                                        "trace_small.npz"))
+    agent = FleetQLearning(src, seed=0)
+    steps = 2 * src.horizon
+    agent.run(steps)
+
+    # gate 1: in-scan metrics are coherent
+    s = agent.metrics_summary()
+    check("metrics.counts", s["reward"]["count"] == src.cells * steps,
+          f"{s['reward']['count']} == {src.cells * steps}")
+    floor = -MAX_RESPONSE_MS / 1000.0
+    check("metrics.reward_range",
+          floor <= s["reward"]["min"] <= s["reward"]["max"] <= 0.0,
+          f"[{s['reward']['min']:.3f}, {s['reward']['max']:.3f}]")
+    check("metrics.hist_mass",
+          sum(s["reward"]["hist"]) == s["reward"]["count"])
+
+    # gate 2+3: spans through a real engine dispatch
+    engines = build_engines(get_config("edge-ladder"), variants=("d0",),
+                            max_len=48)
+    rec = SpanRecorder()
+    res = FleetOrchestrator(agent).route(
+        dispatch=engines, max_new_tokens=2, batch_size=4, prompt_len=8,
+        spans=rec, with_edge_util=True)
+    gb = res.summary()["gap_breakdown"]
+    w, pr = gb["wall_ms"], gb["per_request_ms"]
+    check("gap.wall_identity",
+          abs(w["batching"] + w["compute"] + w["dispatch"] - w["total"])
+          < 1e-6 and w["dispatch"] >= 0.0,
+          f"{w['batching']:.1f}+{w['compute']:.1f}+{w['dispatch']:.1f}"
+          f" == {w['total']:.1f} ms")
+    check("gap.e2e_identity",
+          abs(pr["queueing"] + pr["compute"] - pr["e2e"]) < 1e-6,
+          f"{pr['queueing']:.1f}+{pr['compute']:.1f} == {pr['e2e']:.1f} ms")
+    check("gap.queue_nonneg",
+          all(r.queue_ms >= 0.0 for r in res.served))
+
+    path = rec.save(TRACE_PATH, manifest=run_manifest())
+    with open(path) as f:
+        trace = json.load(f)
+    validate_chrome_trace(trace)
+    names = {e["name"] for e in trace["traceEvents"]}
+    need = {"route.decide", "route.dispatch", "dispatch.batch_build",
+            "engine.generate", "engine.prefill", "engine.decode"}
+    check("trace.schema_and_spans", need <= names,
+          f"{len(trace['traceEvents'])} events -> {path}")
+    del np  # imported for parity with the test suite's usage
+
+
+def overhead_gate():
+    """Best-of-N timing, retried: the accumulator update is a handful of
+    elementwise ops against a full RL step, so the true ratio is ~1.0;
+    retries absorb CI scheduler noise without weakening the gate."""
+    from benchmarks.bench_fleet_dqn import bench_rl
+    from repro.fleet import FleetDQN, FleetDQNConfig
+
+    cells, steps, chunk = 128, 400, 200
+    best = float("inf")
+    for attempt in range(3):
+        on = min(bench_rl(FleetDQN, cells, steps, chunk,
+                          cfg=FleetDQNConfig(), seed=0)
+                 for _ in range(2))
+        off = min(bench_rl(FleetDQN, cells, steps, chunk,
+                           cfg=FleetDQNConfig(), seed=0, metrics=False)
+                  for _ in range(2))
+        ratio = off / on
+        best = min(best, ratio)
+        print(f"[obs_smoke] overhead attempt {attempt + 1}: "
+              f"{ratio:.3f}x (instrumented {on:.0f} vs "
+              f"uninstrumented {off:.0f} steps/s)", flush=True)
+        if best < OVERHEAD_GATE:
+            break
+    check("metrics.overhead", best < OVERHEAD_GATE,
+          f"{best:.3f}x < {OVERHEAD_GATE}x")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-overhead", action="store_true",
+                    help="schema/identity gates only (no timing)")
+    args = ap.parse_args()
+    train_and_route()
+    if not args.skip_overhead:
+        overhead_gate()
+    print("[obs_smoke] all gates passed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

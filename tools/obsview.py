@@ -1,0 +1,139 @@
+"""Pretty-print or diff manifest-stamped run JSONs.
+
+Every ``benchmarks/run.py --json`` output (and anything written through
+``benchmarks.common.save_json``) carries a ``repro.obs.report``
+manifest. This tool renders one run — provenance header plus a flat
+metric table — or diffs two runs metric-by-metric, flagging moves
+above a threshold.
+
+Usage:
+  python tools/obsview.py results/BENCH_fleet.json
+  python tools/obsview.py --diff old.json new.json [--threshold 0.05]
+
+Stdlib only; exit code 0 always (a diff is information, not a gate).
+"""
+import argparse
+import json
+import numbers
+
+
+def flatten(obj, prefix=""):
+    """Flat dict of dotted-path -> scalar, skipping the manifest."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if k == "manifest":
+                continue
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = obj
+    return out
+
+
+def load(path) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def manifest_lines(payload: dict):
+    m = payload.get("manifest")
+    if not m:
+        return ["  (no manifest)"]
+    git = m.get("git") or {}
+    sha = git.get("sha") or "?"
+    dirty = "+dirty" if git.get("dirty") else ""
+    lines = [
+        f"  git      {sha[:12]}{dirty} ({git.get('branch', '?')})",
+        f"  created  {m.get('created_utc', '?')}",
+        f"  jax      {m.get('jax_version', '?')} on "
+        f"{m.get('backend', '?')} x{m.get('device_count', '?')}",
+        f"  python   {m.get('python', '?')}",
+    ]
+    if m.get("mesh_shape"):
+        lines.append(f"  mesh     {m['mesh_shape']}")
+    if m.get("config_hash"):
+        lines.append(f"  config   {m['config_hash']}")
+    if m.get("wall_seconds") is not None:
+        lines.append(f"  wall     {float(m['wall_seconds']):.1f}s")
+    return lines
+
+
+def fmt(v) -> str:
+    if isinstance(v, bool) or not isinstance(v, numbers.Real):
+        return str(v)
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.6g}"
+
+
+def show(path: str) -> None:
+    payload = load(path)
+    print(path)
+    for line in manifest_lines(payload):
+        print(line)
+    print()
+    flat = flatten(payload)
+    if not flat:
+        print("  (no metrics)")
+        return
+    width = max(len(k) for k in flat)
+    for k in sorted(flat):
+        print(f"  {k:<{width}}  {fmt(flat[k])}")
+
+
+def diff(path_a: str, path_b: str, threshold: float) -> None:
+    a, b = load(path_a), load(path_b)
+    fa, fb = flatten(a), flatten(b)
+    print(f"--- {path_a}")
+    for line in manifest_lines(a):
+        print(line)
+    print(f"+++ {path_b}")
+    for line in manifest_lines(b):
+        print(line)
+    print()
+    keys = sorted(set(fa) | set(fb))
+    width = max(len(k) for k in keys) if keys else 0
+    moved = 0
+    for k in keys:
+        va, vb = fa.get(k), fb.get(k)
+        if va == vb:
+            continue
+        if isinstance(va, numbers.Real) and isinstance(vb, numbers.Real) \
+                and not isinstance(va, bool) and not isinstance(vb, bool):
+            base = abs(va) if va else 1.0
+            rel = (vb - va) / base
+            mark = " <-- " if abs(rel) >= threshold else "     "
+            print(f"  {k:<{width}}  {fmt(va):>14} -> {fmt(vb):>14} "
+                  f"({rel:+.1%}){mark}")
+            moved += abs(rel) >= threshold
+        else:
+            print(f"  {k:<{width}}  {fmt(va):>14} -> {fmt(vb):>14}")
+            moved += 1
+    print(f"\n{moved} metric(s) moved >= {threshold:.0%} "
+          f"(of {len(keys)} compared)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="pretty-print one manifest-stamped run JSON or "
+                    "diff two")
+    ap.add_argument("paths", nargs="+", help="one run, or two with --diff")
+    ap.add_argument("--diff", action="store_true",
+                    help="diff two runs metric-by-metric")
+    ap.add_argument("--threshold", type=float, default=0.05,
+                    help="relative move that gets flagged (default 5%%)")
+    args = ap.parse_args()
+    if args.diff:
+        if len(args.paths) != 2:
+            ap.error("--diff needs exactly two paths")
+        diff(args.paths[0], args.paths[1], args.threshold)
+    else:
+        for p in args.paths:
+            show(p)
+
+
+if __name__ == "__main__":
+    main()
