@@ -1,6 +1,8 @@
 """Kernel micro-benchmarks: interpret-mode Pallas vs jnp oracle (CPU
 wall time is NOT the TPU target — correctness + structural cost only)
-plus analytic FLOP counts per call."""
+plus analytic FLOP counts per call and, via ``profile_kernel``, the
+compiler's own cost model (``repro.obs.prof``) next to the analytic
+count — the two should agree within fusion slop."""
 import time
 
 import jax
@@ -9,6 +11,7 @@ import numpy as np
 
 from benchmarks.common import Timer, emit, save_json
 from repro.kernels import ops, ref
+from repro.obs.prof import profile_fn
 
 
 def _time(fn, *args, reps=3, **kw):
@@ -17,6 +20,17 @@ def _time(fn, *args, reps=3, **kw):
     for _ in range(reps):
         jax.block_until_ready(fn(*args, **kw))
     return (time.perf_counter() - t0) / reps * 1e6
+
+
+def profile_kernel(fn, *args, name=None, **kw):
+    """Compiled-cost profile of one kernel call as a JSON-ready dict
+    (flops / bytes accessed / arithmetic intensity / roofline terms;
+    see ``repro.obs.prof.CostProfile``). Keyword args are closed over
+    so implementation switches (``impl=``, ``causal=``) profile the
+    variant actually benchmarked."""
+    prof = profile_fn(lambda *a: fn(*a, **kw), *args,
+                      name=name or getattr(fn, "__name__", "kernel"))
+    return prof.as_dict()
 
 
 def main():
@@ -54,7 +68,16 @@ def main():
     us_r = _time(ops.int8_matmul, xq, sx, wq, sw, impl="ref")
     emit("kernel_int8_matmul_512", us_k,
          f"{2*m*kk*n/1e6:.0f}MFLOP_ref{us_r:.0f}us")
-    out["int8"] = {"us_pallas_interpret": us_k, "us_ref": us_r}
+    # exemplar compiled-cost profile: the compiler's flop count for the
+    # ref matmul vs the analytic 2mkn, plus its roofline position
+    prof = profile_kernel(ops.int8_matmul, xq, sx, wq, sw, impl="ref",
+                          name="int8_matmul_512_ref")
+    emit("kernel_int8_matmul_512_prof", 0.0,
+         f"compiled_{prof['flops']/1e6:.0f}MFLOP_analytic_"
+         f"{2*m*kk*n/1e6:.0f}MFLOP_intensity{prof['arithmetic_intensity']:.1f}_"
+         f"{prof['dominant']}")
+    out["int8"] = {"us_pallas_interpret": us_k, "us_ref": us_r,
+                   "profile": prof}
 
     bt, st, di, nn = 1, 256, 128, 16
     u = jax.random.normal(ks[0], (bt, st, di)) * 0.5

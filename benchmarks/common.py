@@ -27,12 +27,25 @@ def save_json(name: str, obj, **manifest_extra):
     manifest (git SHA, jax version, config hash, ...; see
     ``repro.obs.report``) so every BENCH JSON says what produced it.
     ``manifest_extra`` (e.g. ``wall_seconds=...``) merges into the
-    manifest."""
-    from repro.obs.report import attach_manifest
+    manifest.
+
+    Additionally appends one flattened row (numeric metrics + git sha +
+    ``created_utc``) to the gitignored ``results/history.jsonl`` — the
+    local perf trail rendered by ``tools/obsview.py --history``, so the
+    trend between checked-in baseline updates is never lost."""
+    from repro.obs.report import attach_manifest, flatten, is_number
     os.makedirs(RESULTS_DIR, exist_ok=True)
     payload = attach_manifest(dict(obj), **manifest_extra)
     with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
         json.dump(payload, f, indent=1, default=str)
+    m = payload["manifest"]
+    row = {"_name": name,
+           "_created_utc": m.get("created_utc"),
+           "_git_sha": (m.get("git") or {}).get("sha")}
+    row.update({k: v for k, v in flatten(payload).items()
+                if is_number(v)})
+    with open(os.path.join(RESULTS_DIR, "history.jsonl"), "a") as f:
+        f.write(json.dumps(row, default=str) + "\n")
 
 
 class Timer:

@@ -8,7 +8,8 @@
 fleet-scale headline numbers (env steps/sec, tabular + DQN RL-loop
 steps/sec, converged cells/sec, DQN held-out reward ratio, topology
 overhead/uplift, trace-replay speedup, sharded per-device throughput
-and local-vs-alltoall aggregation cost) in one machine-readable file
+and local-vs-alltoall aggregation cost, compiled-cost RL stage
+fractions and the scaling-cliff diagnosis) in one machine-readable file
 so the perf trajectory is tracked across PRs (see docs/BENCHMARKS.md).
 Every JSON is stamped with a provenance manifest (git SHA, jax
 version, config hash — ``repro.obs.report``); pretty-print or diff
@@ -22,10 +23,10 @@ from benchmarks import (bench_adaptation, bench_fig1_motivation,
                         bench_fig5_user_variability, bench_fig7_transfer,
                         bench_fleet_dqn, bench_fleet_sharded,
                         bench_fleet_throughput, bench_kernels,
-                        bench_overhead, bench_table8_decisions,
-                        bench_table9_constraints, bench_table10_sota,
-                        bench_table11_convergence, bench_topology,
-                        bench_trace_replay)
+                        bench_overhead, bench_profile,
+                        bench_table8_decisions, bench_table9_constraints,
+                        bench_table10_sota, bench_table11_convergence,
+                        bench_topology, bench_trace_replay)
 from benchmarks.common import save_json
 
 SUITES = {
@@ -44,11 +45,12 @@ SUITES = {
     "topology": bench_topology,       # beyond-paper: shared edges + cloud q
     "trace_replay": bench_trace_replay,  # beyond-paper: trace + serving bridge
     "fleet_sharded": bench_fleet_sharded,  # beyond-paper: multi-device fleet
+    "profile": bench_profile,  # compiled-cost stage fracs + cliff diagnosis
 }
 
 #: suites whose main() returns the headline dict folded into BENCH_fleet.json
 FLEET_SUITES = ("fleet", "fleet_dqn", "topology", "trace_replay",
-                "fleet_sharded")
+                "fleet_sharded", "profile")
 
 
 def main() -> None:
@@ -82,6 +84,7 @@ def main() -> None:
         topo = fleet_metrics.get("topology", {})
         trace = fleet_metrics.get("trace_replay", {})
         sh = fleet_metrics.get("fleet_sharded", {})
+        prof = fleet_metrics.get("profile", {})
         save_json("BENCH_fleet", {
             "env_steps_per_s": tp.get("fleet_env_steps_per_s"),
             "rl_steps_per_s": tp.get("fleet_rl_steps_per_s"),
@@ -101,6 +104,11 @@ def main() -> None:
                 sh.get("per_device_env_steps_per_s"),
             "sharded_per_device_flatness": sh.get("per_device_flatness"),
             "sharded_local_vs_alltoall_x": sh.get("local_vs_alltoall_x"),
+            "rl_stage_fracs": prof.get("rl_stage_fracs"),
+            "rl_dominant_stage": prof.get("dominant_stage_flops"),
+            "env_flops_per_cell": prof.get("env_flops_per_cell"),
+            "cliff_cells": prof.get("cliff_cells"),
+            "cliff_classification": prof.get("cliff_classification"),
             "suites": fleet_metrics,
         }, wall_seconds=time.time() - t0,
             failures=[n for n, _ in failures])

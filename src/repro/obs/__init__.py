@@ -1,6 +1,6 @@
 """repro.obs — observability for the fleet reproduction.
 
-Three independent seams, all optional and all zero-cost when unused:
+Four independent seams, all optional and all zero-cost when unused:
 
 * :mod:`repro.obs.metrics` — ``MetricsAccumulator``, a jit-safe pytree
   of count/sum/sumsq/min/max + fixed-bin histograms that rides inside
@@ -10,22 +10,39 @@ Three independent seams, all optional and all zero-cost when unused:
   ``jax.profiler.TraceAnnotation`` so device work nests under spans.
 * :mod:`repro.obs.report` — ``run_manifest``/``attach_manifest``, the
   provenance stamp (git SHA, jax version, mesh shape, config hash)
-  attached to bench JSONs and training results.
+  attached to bench JSONs and training results, plus the shared
+  ``flatten``/``rel_diff`` helpers behind ``tools/obsview.py`` and the
+  ``tools/benchgate.py`` perf-regression gate.
+* :mod:`repro.obs.prof` — ``CostProfile``/``stage_costs``/
+  ``scaling_sweep``, compiled-cost profiling of jitted fleet programs
+  (flops / bytes / roofline terms from ``cost_analysis``), the RL-loop
+  stage breakdown, and the scaling-cliff classifier.
 
 The package imports only jax/numpy/stdlib; every other layer may import
 it (see docs/ARCHITECTURE.md layering rules).
 """
 from repro.obs.metrics import MetricDef, MetricsAccumulator
-from repro.obs.report import attach_manifest, config_hash, run_manifest
+from repro.obs.prof import (BackendPeaks, CostProfile, backend_peaks,
+                            profile_fn, scaling_sweep, stage_costs)
+from repro.obs.report import (attach_manifest, config_hash, flatten,
+                              rel_diff, run_manifest)
 from repro.obs.spans import SpanRecorder, span, validate_chrome_trace
 
 __all__ = [
+    "BackendPeaks",
+    "CostProfile",
     "MetricDef",
     "MetricsAccumulator",
     "SpanRecorder",
     "attach_manifest",
+    "backend_peaks",
     "config_hash",
+    "flatten",
+    "profile_fn",
+    "rel_diff",
     "run_manifest",
+    "scaling_sweep",
     "span",
+    "stage_costs",
     "validate_chrome_trace",
 ]

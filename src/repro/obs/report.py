@@ -5,17 +5,22 @@ flag), jax/jaxlib versions, backend and device count, mesh shape,
 a stable hash of the config, and wall-clock context. It is attached to
 every ``benchmarks/run.py --json`` payload (via ``benchmarks.common.
 save_json``) and to ``FleetTrainResult``; ``tools/obsview.py`` reads it
-back to pretty-print or diff runs.
+back to pretty-print or diff runs, and ``tools/benchgate.py`` diffs a
+fresh run against the tracked baseline through the shared
+:func:`flatten` / :func:`rel_diff` helpers below.
 
 Everything here is fault-tolerant: a missing git binary or a non-repo
 checkout yields ``None`` fields, never an exception — provenance must
-not take down a benchmark.
+not take down a benchmark. ``jax`` is imported lazily (only
+``run_manifest`` needs it) so the stdlib-level helpers stay cheap to
+import from the ``tools/`` scripts.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import json
+import numbers
 import os
 import platform
 import subprocess
@@ -23,9 +28,41 @@ import sys
 from datetime import datetime, timezone
 from typing import Any, Optional
 
-import jax
-
 MANIFEST_SCHEMA = "repro.obs/manifest-v1"
+
+
+def flatten(obj: Any, prefix: str = "") -> dict:
+    """Flat dict of dotted-path -> scalar, skipping the manifest.
+
+    THE shared flattening of nested run JSONs — ``tools/obsview.py``
+    (show/diff/history) and ``tools/benchgate.py`` both read metrics
+    through it, so a key renders and gates under the same dotted path.
+    """
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if k == "manifest":
+                continue
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = obj
+    return out
+
+
+def is_number(v: Any) -> bool:
+    """True for real numerics that compare as metrics (bools excluded —
+    a flipped flag is a structural change, not a relative move)."""
+    return isinstance(v, numbers.Real) and not isinstance(v, bool)
+
+
+def rel_diff(a: float, b: float) -> float:
+    """Signed relative move from ``a`` to ``b``; a zero base falls back
+    to an absolute difference (base 1.0) so dividing never explodes."""
+    base = abs(a) if a else 1.0
+    return (b - a) / base
 
 _REPO_ROOT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "..", ".."))
@@ -63,6 +100,7 @@ def git_info() -> dict:
 def run_manifest(config: Any = None, mesh=None, **extra) -> dict:
     """The provenance stamp. ``mesh`` is a ``jax.sharding.Mesh`` (or
     None); ``extra`` keys (e.g. ``wall_seconds=...``) merge in last."""
+    import jax
     try:
         import jaxlib
         jaxlib_version = getattr(jaxlib, "__version__", None)

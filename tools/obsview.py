@@ -1,36 +1,35 @@
-"""Pretty-print or diff manifest-stamped run JSONs.
+"""Pretty-print or diff manifest-stamped run JSONs, and render the
+local perf history.
 
 Every ``benchmarks/run.py --json`` output (and anything written through
 ``benchmarks.common.save_json``) carries a ``repro.obs.report``
 manifest. This tool renders one run — provenance header plus a flat
-metric table — or diffs two runs metric-by-metric, flagging moves
-above a threshold.
+metric table — diffs two runs metric-by-metric, or plots the per-metric
+trajectory accumulated in ``results/history.jsonl`` (one flattened row
+appended per ``save_json`` call), so the perf trend is visible between
+checked-in baseline updates.
 
 Usage:
   python tools/obsview.py results/BENCH_fleet.json
   python tools/obsview.py --diff old.json new.json [--threshold 0.05]
+      [--fail-on-move]                  # exit 1 if anything moved
+  python tools/obsview.py --history [results/history.jsonl]
+      [--name BENCH_fleet] [--filter steps_per_s] [--last 12]
 
-Stdlib only; exit code 0 always (a diff is information, not a gate).
+Flattening and the relative-diff rule are shared with the
+``tools/benchgate.py`` regression gate via ``repro.obs.report``. A
+plain diff still exits 0 (information, not a gate); ``--fail-on-move``
+turns the threshold into an exit code for scripting.
 """
 import argparse
 import json
 import numbers
+import os
+import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-def flatten(obj, prefix=""):
-    """Flat dict of dotted-path -> scalar, skipping the manifest."""
-    out = {}
-    if isinstance(obj, dict):
-        for k, v in obj.items():
-            if k == "manifest":
-                continue
-            out.update(flatten(v, f"{prefix}{k}."))
-    elif isinstance(obj, list):
-        for i, v in enumerate(obj):
-            out.update(flatten(v, f"{prefix}{i}."))
-    else:
-        out[prefix[:-1]] = obj
-    return out
+from repro.obs.report import flatten, is_number, rel_diff  # noqa: E402
 
 
 def load(path) -> dict:
@@ -84,7 +83,9 @@ def show(path: str) -> None:
         print(f"  {k:<{width}}  {fmt(flat[k])}")
 
 
-def diff(path_a: str, path_b: str, threshold: float) -> None:
+def diff(path_a: str, path_b: str, threshold: float) -> int:
+    """Print the metric-by-metric diff; returns the moved count so
+    ``--fail-on-move`` can turn it into an exit code."""
     a, b = load(path_a), load(path_b)
     fa, fb = flatten(a), flatten(b)
     print(f"--- {path_a}")
@@ -101,10 +102,8 @@ def diff(path_a: str, path_b: str, threshold: float) -> None:
         va, vb = fa.get(k), fb.get(k)
         if va == vb:
             continue
-        if isinstance(va, numbers.Real) and isinstance(vb, numbers.Real) \
-                and not isinstance(va, bool) and not isinstance(vb, bool):
-            base = abs(va) if va else 1.0
-            rel = (vb - va) / base
+        if is_number(va) and is_number(vb):
+            rel = rel_diff(va, vb)
             mark = " <-- " if abs(rel) >= threshold else "     "
             print(f"  {k:<{width}}  {fmt(va):>14} -> {fmt(vb):>14} "
                   f"({rel:+.1%}){mark}")
@@ -114,23 +113,102 @@ def diff(path_a: str, path_b: str, threshold: float) -> None:
             moved += 1
     print(f"\n{moved} metric(s) moved >= {threshold:.0%} "
           f"(of {len(keys)} compared)")
+    return moved
+
+
+def history(path: str, name: str, substr: str, last: int) -> None:
+    """Per-metric trajectory over the appended ``history.jsonl`` rows
+    (oldest -> newest), restricted to one bench ``name`` and keys
+    containing ``substr``. Nested ``suites.*`` detail rows are skipped
+    unless explicitly matched by ``--filter``."""
+    if not os.path.exists(path):
+        print(f"{path}: no history yet (rows are appended by "
+              "benchmarks.common.save_json)")
+        return
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if name and r.get("_name") != name:
+                continue
+            rows.append(r)
+    rows = rows[-last:]
+    if not rows:
+        print(f"{path}: no rows" + (f" for name {name!r}" if name else ""))
+        return
+    print(f"{path}: {len(rows)} run(s)"
+          + (f" of {name!r}" if name else "") + ", oldest -> newest")
+    for r in rows:
+        print(f"  {r.get('_created_utc', '?'):<26} "
+              f"git {str(r.get('_git_sha'))[:12]}")
+    print()
+    keys = sorted({k for r in rows for k in r
+                   if not k.startswith("_") and is_number(r[k])})
+    if substr:
+        keys = [k for k in keys if substr in k]
+    else:
+        keys = [k for k in keys if not k.startswith("suites.")]
+    if not keys:
+        print("  (no matching numeric metrics)")
+        return
+    width = max(len(k) for k in keys)
+    for k in keys:
+        vals = [r.get(k) for r in rows]
+        present = [v for v in vals if is_number(v)]
+        traj = " -> ".join(fmt(v) if is_number(v) else "·" for v in vals)
+        tail = ""
+        if len(present) >= 2:
+            tail = f"  ({rel_diff(present[0], present[-1]):+.1%} overall)"
+        print(f"  {k:<{width}}  {traj}{tail}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(
-        description="pretty-print one manifest-stamped run JSON or "
-                    "diff two")
-    ap.add_argument("paths", nargs="+", help="one run, or two with --diff")
+        description="pretty-print one manifest-stamped run JSON, diff "
+                    "two, or render the local results/history.jsonl")
+    ap.add_argument("paths", nargs="*",
+                    help="one run; two with --diff; optional history "
+                         "path with --history")
     ap.add_argument("--diff", action="store_true",
                     help="diff two runs metric-by-metric")
     ap.add_argument("--threshold", type=float, default=0.05,
                     help="relative move that gets flagged (default 5%%)")
+    ap.add_argument("--fail-on-move", action="store_true",
+                    help="with --diff: exit 1 when any metric moved "
+                         ">= threshold")
+    ap.add_argument("--history", action="store_true",
+                    help="render per-metric trajectories from "
+                         "history.jsonl (default results/history.jsonl)")
+    ap.add_argument("--name", default="BENCH_fleet",
+                    help="history: bench name to select ('' for all)")
+    ap.add_argument("--filter", default="",
+                    help="history: only metrics containing this "
+                         "substring (also unhides suites.* keys)")
+    ap.add_argument("--last", type=int, default=10,
+                    help="history: number of most recent runs")
     args = ap.parse_args()
-    if args.diff:
+    if args.diff and args.history:
+        ap.error("--diff and --history are mutually exclusive")
+    if args.history:
+        default = os.path.join(os.path.dirname(__file__), "..", "results",
+                               "history.jsonl")
+        path = args.paths[0] if args.paths else default
+        history(path, args.name, args.filter, max(args.last, 1))
+    elif args.diff:
         if len(args.paths) != 2:
             ap.error("--diff needs exactly two paths")
-        diff(args.paths[0], args.paths[1], args.threshold)
+        moved = diff(args.paths[0], args.paths[1], args.threshold)
+        if args.fail_on_move and moved:
+            sys.exit(1)
     else:
+        if not args.paths:
+            ap.error("give at least one run JSON (or --history)")
         for p in args.paths:
             show(p)
 
