@@ -9,7 +9,9 @@ fleet-scale headline numbers (env steps/sec, tabular + DQN RL-loop
 steps/sec, converged cells/sec, DQN held-out reward ratio, topology
 overhead/uplift, trace-replay speedup, sharded per-device throughput
 and local-vs-alltoall aggregation cost, compiled-cost RL stage
-fractions and the scaling-cliff diagnosis) in one machine-readable file
+fractions and the scaling-cliff diagnosis, SLO attainment measured vs
+predicted + P99 tail + windowed-metrics overhead) in one
+machine-readable file
 so the perf trajectory is tracked across PRs (see docs/BENCHMARKS.md).
 Every JSON is stamped with a provenance manifest (git SHA, jax
 version, config hash — ``repro.obs.report``); pretty-print or diff
@@ -23,7 +25,7 @@ from benchmarks import (bench_adaptation, bench_fig1_motivation,
                         bench_fig5_user_variability, bench_fig7_transfer,
                         bench_fleet_dqn, bench_fleet_sharded,
                         bench_fleet_throughput, bench_kernels,
-                        bench_overhead, bench_profile,
+                        bench_overhead, bench_profile, bench_slo,
                         bench_table8_decisions, bench_table9_constraints,
                         bench_table10_sota, bench_table11_convergence,
                         bench_topology, bench_trace_replay)
@@ -46,11 +48,12 @@ SUITES = {
     "trace_replay": bench_trace_replay,  # beyond-paper: trace + serving bridge
     "fleet_sharded": bench_fleet_sharded,  # beyond-paper: multi-device fleet
     "profile": bench_profile,  # compiled-cost stage fracs + cliff diagnosis
+    "slo": bench_slo,  # windowed metrics overhead + SLO attainment/tails
 }
 
 #: suites whose main() returns the headline dict folded into BENCH_fleet.json
 FLEET_SUITES = ("fleet", "fleet_dqn", "topology", "trace_replay",
-                "fleet_sharded", "profile")
+                "fleet_sharded", "profile", "slo")
 
 
 def main() -> None:
@@ -85,6 +88,7 @@ def main() -> None:
         trace = fleet_metrics.get("trace_replay", {})
         sh = fleet_metrics.get("fleet_sharded", {})
         prof = fleet_metrics.get("profile", {})
+        slo = fleet_metrics.get("slo", {})
         save_json("BENCH_fleet", {
             "env_steps_per_s": tp.get("fleet_env_steps_per_s"),
             "rl_steps_per_s": tp.get("fleet_rl_steps_per_s"),
@@ -98,6 +102,13 @@ def main() -> None:
             "trace_env_steps_per_s": trace.get("trace_env_steps_per_s"),
             "trace_replay_speedup_x": trace.get("trace_replay_speedup_x"),
             "trace_serving_gap_x": trace.get("serving", {}).get("gap_x"),
+            "trace_serving_p95_ms": trace.get("serving", {}).get("p95_ms"),
+            "trace_serving_p99_ms": trace.get("serving", {}).get("p99_ms"),
+            "slo_attainment_measured": slo.get("slo_attainment_measured"),
+            "slo_attainment_predicted": slo.get("slo_attainment_predicted"),
+            "slo_attainment_gap": slo.get("slo_attainment_gap"),
+            "p99_ms": slo.get("p99_ms"),
+            "windowed_overhead_x": slo.get("windowed_overhead_x"),
             "sharded_devices": sh.get("devices"),
             "sharded_env_steps_per_s": sh.get("sharded_env_steps_per_s"),
             "sharded_per_device_env_steps_per_s":

@@ -54,6 +54,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fleet import dynamics, topology
+from repro.obs import timeline
+from repro.obs.metrics import MetricDef, MetricsAccumulator
 from repro.obs.spans import span as _span
 from repro.fleet.population import (check_pad_width, default_actions,
                                     fleet_bruteforce,
@@ -575,6 +577,15 @@ class ServedRequest:
     predicted_ms: float         # latency model's per-user prediction
     measured_ms: float          # engine batch wall-clock (ms)
     queue_ms: float = 0.0       # submit -> batch-drain wait (ms)
+    deadline_ms: float = float("inf")   # SLO stamped at submit
+    # scored at drain by ServingEngine.serve: e2e <= deadline_ms
+    deadline_met: Optional[bool] = None
+
+    @property
+    def e2e_ms(self) -> float:
+        """Measured end-to-end latency: queueing + engine compute —
+        what the SLO deadline is scored against."""
+        return self.queue_ms + self.measured_ms
 
 
 @dataclasses.dataclass
@@ -591,6 +602,10 @@ class RouteResult:
     timings: Optional[dict] = None
     #: utilization fraction above which an edge counts as hot
     hot_edge_util: float = 1.0
+    #: device-side latency accumulator fed the measured per-request
+    #: e2e stream during dispatch (histogram source of ``slo()``'s
+    #: quantiles; None when nothing was dispatched)
+    lat_acc: Optional[MetricsAccumulator] = None
 
     @property
     def predicted_ms(self) -> np.ndarray:
@@ -665,6 +680,76 @@ class RouteResult:
             "per_tier_variant": per,
         }
 
+    def slo(self) -> Optional[dict]:
+        """Deadline attainment + latency quantiles (None w/o dispatch).
+
+        Every request carried a ``deadline_ms`` stamped at submit and
+        was scored at drain (``ServingEngine.serve``); this reduces the
+        stamps into the ISSUE-8 report:
+
+        * **measured vs predicted attainment** — overall and per
+          (tier, variant), each an exact complement split, so
+          ``attained + violated == dispatched`` at every granularity
+          (the identity ``tools/obs_smoke.py`` gates). ``predicted``
+          scores the latency model's per-user prediction against the
+          same deadline; ``attainment_gap`` = predicted − measured
+          quantifies how far the ~2.4x ``trace_serving_gap_x`` makes
+          the model overstate deliverable SLO.
+        * **quantiles from two sources that must agree**: ``exact_ms``
+          — host-exact order statistics over the per-request measured
+          e2e latencies (the same values emitted as ``request.e2e``
+          spans, so ``SpanRecorder.durations_ms`` reproduces them) —
+          and ``hist_ms`` — histogram-derived from the device-side
+          ``lat_acc`` accumulator, within one ``bin_width`` unless
+          ``clipped`` flags out-of-range tails.
+        """
+        if not self.served:
+            return None
+        deadline = float(max(r.deadline_ms for r in self.served))
+        e2e = np.asarray([r.e2e_ms for r in self.served])
+        meas_att = sum(bool(r.deadline_met) for r in self.served)
+        pred_att, pred_vio = timeline.attainment(
+            [r.predicted_ms for r in self.served], deadline)
+        n = len(self.served)
+        per = {}
+        for r in self.served:
+            key = f"{r.tier}/{r.variant}"
+            tv = per.setdefault(key, {
+                "dispatched": 0, "measured_attained": 0,
+                "measured_violated": 0, "predicted_attained": 0,
+                "predicted_violated": 0})
+            tv["dispatched"] += 1
+            tv["measured_attained" if r.deadline_met
+               else "measured_violated"] += 1
+            tv["predicted_attained" if r.predicted_ms <= r.deadline_ms
+               else "predicted_violated"] += 1
+        for tv in per.values():
+            tv["attainment_measured"] = \
+                tv["measured_attained"] / tv["dispatched"]
+            tv["attainment_predicted"] = \
+                tv["predicted_attained"] / tv["dispatched"]
+        quantiles = {
+            "exact_ms": timeline.exact_quantiles(e2e),
+            "predicted_exact_ms": timeline.exact_quantiles(
+                self.predicted_ms),
+        }
+        if self.lat_acc is not None:
+            quantiles["hist_ms"] = self.lat_acc.quantiles("e2e_ms",
+                                                          warn=False)
+        meas_frac = meas_att / n
+        pred_frac = pred_att / n
+        return {
+            "deadline_ms": deadline,
+            "requests": n,
+            "measured": {"attained": meas_att, "violated": n - meas_att,
+                         "attainment": meas_frac},
+            "predicted": {"attained": pred_att, "violated": pred_vio,
+                          "attainment": pred_frac},
+            "attainment_gap": pred_frac - meas_frac,
+            "per_tier_variant": per,
+            "quantiles": quantiles,
+        }
+
     def summary(self) -> dict:
         s = {"requests": len(self.served), "batches": self.batches,
              "predicted_mean_ms": float(self.predicted_ms.mean())
@@ -678,6 +763,9 @@ class RouteResult:
         breakdown = self.gap_breakdown()
         if breakdown is not None:
             s["gap_breakdown"] = breakdown
+        slo = self.slo()
+        if slo is not None:
+            s["slo"] = slo
         return s
 
 
@@ -737,7 +825,8 @@ class FleetOrchestrator:
 
     def _dispatch(self, dec, scen: FleetScenario, engines,
                   prompts: Optional[Callable], max_new_tokens: int,
-                  batch_size: int, prompt_len: int, seed: int, spans=None):
+                  batch_size: int, prompt_len: int, seed: int, spans=None,
+                  deadline_ms: float = float("inf")):
         from repro.serving import Request, RequestBatcher
         t0 = time.perf_counter()
         dec_np = np.asarray(dec)
@@ -769,9 +858,10 @@ class FleetOrchestrator:
                 batchers.setdefault((tier, variant),
                                     RequestBatcher(batch_size)).submit(
                     Request(rid, p, max_new_tokens=max_new_tokens,
-                            user=int(u)))
+                            user=int(u), deadline_ms=deadline_ms))
         t_build = time.perf_counter()
         served, batches, compute_s = [], 0, 0.0
+        slo_attained = slo_violated = 0
         per_tv = {}
         for (tier, variant), batcher in batchers.items():
             eng = engines[tier][variant]
@@ -800,7 +890,28 @@ class FleetOrchestrator:
                         tv["queue_ms"].append(q_ms)
                         served.append(ServedRequest(
                             c, u, a, t_, v_, float(pred[c, u]),
-                            float(r.response_time * 1e3), queue_ms=q_ms))
+                            float(r.response_time * 1e3), queue_ms=q_ms,
+                            deadline_ms=r.deadline_ms,
+                            deadline_met=r.deadline_met))
+                        slo_attained += bool(r.deadline_met)
+                        slo_violated += not r.deadline_met
+                        if spans is not None:
+                            # retrospective per-request e2e interval
+                            # (submit -> drain + emulated compute): the
+                            # host-exact quantile source — its durations
+                            # reproduce ServedRequest.e2e_ms exactly
+                            spans.complete(
+                                "request.e2e", r.arrival_time,
+                                r.queue_time + r.response_time,
+                                rid=r.rid, tier=t_, variant=v_,
+                                deadline_met=bool(r.deadline_met))
+                    if spans is not None:
+                        # running per-batch SLO attainment counter track
+                        spans.counter(
+                            "slo.attainment", attained=slo_attained,
+                            violated=slo_violated,
+                            attainment=slo_attained
+                            / max(slo_attained + slo_violated, 1))
         wall_ms = (time.perf_counter() - t0) * 1e3
         batching_ms = (t_build - t0) * 1e3
         compute_ms = compute_s * 1e3
@@ -816,7 +927,18 @@ class FleetOrchestrator:
                    "dispatch_ms": wall_ms - batching_ms - compute_ms,
                    "per_tier_variant": per_tv}
         served.sort(key=lambda s: (s.cell, s.user))
-        return served, batches, timings
+        # device-side latency accumulator (built AFTER the timed wall so
+        # it cannot perturb the gap_breakdown identities): the histogram
+        # source RouteResult.slo() cross-checks against the host-exact
+        # per-request e2e stream
+        hi = 4.0 * deadline_ms if np.isfinite(deadline_ms) \
+            else 4.0 * dynamics.MAX_RESPONSE_MS
+        lat = MetricsAccumulator.create(
+            {"e2e_ms": MetricDef(lo=0.0, hi=max(hi, 1.0), bins=64)})
+        if served:
+            lat = lat.update({"e2e_ms": jnp.asarray(
+                [r.e2e_ms for r in served], jnp.float32)})
+        return served, batches, timings, lat
 
     # ------------------------------------------------------------------
     def route(self, scen: Optional[FleetScenario] = None,
@@ -825,7 +947,8 @@ class FleetOrchestrator:
               prompts: Optional[Callable] = None, max_new_tokens: int = 4,
               batch_size: int = 8, prompt_len: int = 12, seed: int = 0,
               spans=None, hot_edge_util: float = 1.0,
-              as_result: bool = False):
+              as_result: bool = False,
+              deadline_ms: Optional[float] = None):
         """Route the whole fleet in one greedy pass.
 
         Without ``dispatch`` this is the pre-redesign contract:
@@ -845,11 +968,20 @@ class FleetOrchestrator:
 
         Observability knobs: ``spans`` (a ``repro.obs.spans.
         SpanRecorder``) records route.decide / dispatch.* /
-        engine.* spans as Chrome-trace events; ``hot_edge_util`` sets
-        the utilization fraction at or above which an edge lands in
-        ``RouteResult.hot_edges``; ``as_result=True`` returns a
+        engine.* spans as Chrome-trace events — plus, when
+        dispatching, per-request ``request.e2e`` intervals and a
+        running ``slo.attainment`` counter track; ``hot_edge_util``
+        sets the utilization fraction at or above which an edge lands
+        in ``RouteResult.hot_edges``; ``as_result=True`` returns a
         `RouteResult` even without a dispatch (empty ``served``), so
         callers get one return shape.
+
+        ``deadline_ms`` is the SLO budget stamped on every dispatched
+        request (end-to-end: queue + emulated compute). Default None
+        = the scenario QoS target ``dynamics.MAX_RESPONSE_MS`` — the
+        same bound the reward's constraint-violation penalty enforces,
+        so serving SLO attainment and training QoS violations measure
+        one target. ``RouteResult.slo()`` reports attainment.
         """
         policy = self.policy
         if scen is None:
@@ -881,14 +1013,18 @@ class FleetOrchestrator:
                 util = topology.edge_utilization(dec, topo,
                                                  active=scen.active)
         if dispatch is not None:
+            slo_ms = dynamics.MAX_RESPONSE_MS if deadline_ms is None \
+                else float(deadline_ms)
             with _span(spans, "route.dispatch"):
-                served, batches, timings = self._dispatch(
+                served, batches, timings, lat = self._dispatch(
                     dec, scen, dispatch, prompts, max_new_tokens,
-                    batch_size, prompt_len, seed, spans=spans)
+                    batch_size, prompt_len, seed, spans=spans,
+                    deadline_ms=slo_ms)
             return RouteResult(decisions=dec, ids=ids, served=served,
                                batches=batches, edge_util=util,
                                timings=timings,
-                               hot_edge_util=hot_edge_util)
+                               hot_edge_util=hot_edge_util,
+                               lat_acc=lat)
         if as_result:
             return RouteResult(decisions=dec, ids=ids, served=[],
                                batches=0, edge_util=util,

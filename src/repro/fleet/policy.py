@@ -246,7 +246,8 @@ class FleetDQN:
     def __init__(self, scen, fleet_cfg: Optional[FleetConfig] = None,
                  cfg: Optional[FleetDQNConfig] = None,
                  actions: Optional[np.ndarray] = None, seed: int = 0,
-                 reset_key=None, mesh=None, metrics: bool = True):
+                 reset_key=None, mesh=None, metrics: bool = True,
+                 n_windows: int = 0, window_len: int = 1):
         """``scen`` is a ``repro.fleet.api.ScenarioSource`` (reset with
         ``reset_key``, default ``PRNGKey(seed)``) — or, equivalently, a
         ``FleetScenario`` plus its ``FleetConfig`` (wrapped into a
@@ -265,7 +266,9 @@ class FleetDQN:
         replay occupancy / epsilon with zero host syncs; read it via
         ``metrics_summary``. Recording consumes no RNG and never feeds
         back into training, so trajectories are bit-identical with it
-        on or off."""
+        on or off — including with ``n_windows > 0``, which adds a
+        per-window ring (``window_len`` steps per slot) to every
+        stream so ``metrics_summary()`` carries the learning curve."""
         self.cfg = cfg or FleetDQNConfig()
         scen, self.source = resolve_source(scen, fleet_cfg, seed, reset_key)
         self.fleet_cfg = getattr(self.source, "cfg", None)
@@ -299,7 +302,10 @@ class FleetDQN:
                                   action_shape=(users,))
         self.scen = scen
         self.counts = jnp.zeros((scen.cells, 2), jnp.int32)
-        self.metrics = fleet_metrics(scen.cells, "dqn") if metrics else None
+        self.metrics = fleet_metrics(scen.cells, "dqn",
+                                     n_windows=n_windows,
+                                     window_len=window_len) if metrics \
+            else None
         if self.mesh is not None:
             from repro.fleet import shard
             self.params = shard.replicate(self.params, self.mesh)

@@ -40,7 +40,8 @@ from repro.fleet.scenarios import FleetConfig, FleetScenario
 from repro.obs.metrics import MetricDef, MetricsAccumulator
 
 
-def fleet_metrics(cells: int, kind: str = "tabular") -> MetricsAccumulator:
+def fleet_metrics(cells: int, kind: str = "tabular", n_windows: int = 0,
+                  window_len: int = 1) -> MetricsAccumulator:
     """The standard in-scan telemetry pack of the fleet agents.
 
     Per-cell signals use ``lanes=cells`` so every accumulator update is
@@ -49,20 +50,28 @@ def fleet_metrics(cells: int, kind: str = "tabular") -> MetricsAccumulator:
     Histogram ranges come from the dynamics invariants: rewards live in
     ``[-MAX_RESPONSE_MS/1000, 0]`` and response times in
     ``[0, MAX_RESPONSE_MS]``; out-of-range values clip into edge bins
-    without corrupting the exact moments.
+    without corrupting the exact moments (and bump the explicit
+    underflow/overflow counters).
+
+    ``n_windows > 0`` gives every stream a ``(n_windows, lanes)``
+    per-window ring (``window_len`` steps per slot), so ``summary()``
+    reports the learning curve — reward/td_abs/loss per window — not
+    just whole-run aggregates. The ring update is the same elementwise
+    op class, so the sharding bit-identity is unchanged.
     """
     r_floor = -dynamics.MAX_RESPONSE_MS / 1000.0
+    w = dict(n_windows=n_windows, window_len=window_len)
     defs = {
-        "reward": MetricDef(lo=r_floor, hi=0.0, lanes=cells),
+        "reward": MetricDef(lo=r_floor, hi=0.0, lanes=cells, **w),
         "mean_ms": MetricDef(lo=0.0, hi=dynamics.MAX_RESPONSE_MS,
-                             lanes=cells),
-        "epsilon": MetricDef(lo=0.0, hi=1.0),
+                             lanes=cells, **w),
+        "epsilon": MetricDef(lo=0.0, hi=1.0, **w),
     }
     if kind == "tabular":
-        defs["td_abs"] = MetricDef(lo=0.0, hi=-r_floor, lanes=cells)
+        defs["td_abs"] = MetricDef(lo=0.0, hi=-r_floor, lanes=cells, **w)
     elif kind == "dqn":
-        defs["loss"] = MetricDef(lo=0.0, hi=25.0)
-        defs["replay_fill"] = MetricDef(lo=0.0, hi=1.0)
+        defs["loss"] = MetricDef(lo=0.0, hi=25.0, **w)
+        defs["replay_fill"] = MetricDef(lo=0.0, hi=1.0, **w)
     else:
         raise ValueError(f"unknown metrics kind {kind!r}")
     return MetricsAccumulator.create(defs)
@@ -70,11 +79,13 @@ def fleet_metrics(cells: int, kind: str = "tabular") -> MetricsAccumulator:
 
 def place_metrics(mets, mesh):
     """Shard an agent's accumulator like its other carries: per-cell
-    lanes along the fleet axis, histograms/scalars replicated."""
+    lanes along the fleet axis (axis 1 of the windowed rings),
+    histograms/counters/scalars replicated."""
     if mets is None or mesh is None:
         return mets
     from repro.fleet import shard
-    return mets.place(lambda x: shard.shard_array(x, mesh),
+    return mets.place(lambda x, axis=0: shard.shard_array(x, mesh,
+                                                          axis=axis),
                       lambda x: shard.replicate(x, mesh))
 
 
@@ -232,7 +243,8 @@ class FleetQLearning:
     def __init__(self, scen, fleet_cfg: Optional[FleetConfig] = None,
                  cfg: Optional[FleetQConfig] = None,
                  actions: Optional[np.ndarray] = None, seed: int = 0,
-                 reset_key=None, mesh=None, metrics: bool = True):
+                 reset_key=None, mesh=None, metrics: bool = True,
+                 n_windows: int = 0, window_len: int = 1):
         """``scen`` is a ``repro.fleet.api.ScenarioSource`` (reset with
         ``reset_key``, default ``PRNGKey(seed)``) — or, equivalently, a
         ``FleetScenario`` plus its ``FleetConfig`` (wrapped into a
@@ -248,7 +260,10 @@ class FleetQLearning:
         the scan carry — per-step reward / response time / |TD| /
         epsilon with zero host syncs; read it via ``metrics_summary``.
         Recording consumes no RNG and never feeds back into training,
-        so trajectories are bit-identical with it on or off."""
+        so trajectories are bit-identical with it on or off —
+        including with ``n_windows > 0``, which adds a per-window ring
+        (``window_len`` steps per slot) to every stream so
+        ``metrics_summary()`` carries the learning curve."""
         self.cfg = cfg or FleetQConfig()
         scen, self.source = resolve_source(scen, fleet_cfg, seed, reset_key)
         self.fleet_cfg = getattr(self.source, "cfg", None)
@@ -267,7 +282,9 @@ class FleetQLearning:
                            jnp.float32)
         self.scen = scen
         self.counts = jnp.zeros((scen.cells, 2), jnp.int32)
-        self.metrics = fleet_metrics(scen.cells, "tabular") if metrics \
+        self.metrics = fleet_metrics(scen.cells, "tabular",
+                                     n_windows=n_windows,
+                                     window_len=window_len) if metrics \
             else None
         if self.mesh is not None:
             from repro.fleet import shard

@@ -17,6 +17,11 @@ Four independent seams, all optional and all zero-cost when unused:
   ``scaling_sweep``, compiled-cost profiling of jitted fleet programs
   (flops / bytes / roofline terms from ``cost_analysis``), the RL-loop
   stage breakdown, and the scaling-cliff classifier.
+* :mod:`repro.obs.timeline` — pure-numpy time-resolved reductions:
+  exact vs histogram-derived latency quantiles (P50/P90/P95/P99 with a
+  one-bin-width agreement bound), SLO attainment counting, and the
+  windowed learning-curve series behind ``tools/obsview.py
+  --timeline``.
 
 The package imports only jax/numpy/stdlib; every other layer may import
 it (see docs/ARCHITECTURE.md layering rules).
@@ -27,22 +32,30 @@ from repro.obs.prof import (BackendPeaks, CostProfile, backend_peaks,
 from repro.obs.report import (attach_manifest, config_hash, flatten,
                               rel_diff, run_manifest)
 from repro.obs.spans import SpanRecorder, span, validate_chrome_trace
+from repro.obs.timeline import (QUANTILES, attainment, exact_quantiles,
+                                hist_quantiles, quantile_key, window_series)
 
 __all__ = [
     "BackendPeaks",
     "CostProfile",
     "MetricDef",
     "MetricsAccumulator",
+    "QUANTILES",
     "SpanRecorder",
     "attach_manifest",
+    "attainment",
     "backend_peaks",
     "config_hash",
+    "exact_quantiles",
     "flatten",
+    "hist_quantiles",
     "profile_fn",
+    "quantile_key",
     "rel_diff",
     "run_manifest",
     "scaling_sweep",
     "span",
     "stage_costs",
     "validate_chrome_trace",
+    "window_series",
 ]

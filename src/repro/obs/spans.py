@@ -69,6 +69,28 @@ class SpanRecorder:
                     "args": _jsonable(args),
                 })
 
+    def complete(self, name: str, t_start: float, dur_s: float, **args):
+        """Record a retrospective 'X' event from host clock stamps.
+
+        ``t_start`` is a stamp on the recorder's own clock (default
+        ``time.perf_counter`` — the clock the serving stack stamps
+        ``Request.arrival_time`` with) and ``dur_s`` a duration in
+        seconds. Used for per-request end-to-end latency events, whose
+        interval (submit -> drain + emulated compute) is only known
+        after the batch drains. ``ts`` clamps at the recorder's birth
+        so traces stay schema-valid even for stamps predating it.
+        """
+        self.events.append({
+            "name": name,
+            "cat": "repro.obs",
+            "ph": "X",
+            "ts": max(0.0, self._us(t_start)),
+            "dur": max(0.0, dur_s * 1e6),
+            "pid": self._pid,
+            "tid": threading.get_ident() & 0x7FFFFFFF,
+            "args": _jsonable(args),
+        })
+
     def instant(self, name: str, **args):
         self.events.append({
             "name": name, "cat": "repro.obs", "ph": "i", "s": "t",

@@ -18,11 +18,17 @@ class Request:
     # host perf_counter stamp; the batcher sets it at submit() if unset,
     # so queue_time below is measurable without caller cooperation
     arrival_time: float = 0.0
+    # SLO deadline stamped at submit (ms of end-to-end latency budget,
+    # queue + compute); inf = no deadline
+    deadline_ms: float = float("inf")
     # filled by the engine:
     output: Optional[np.ndarray] = None
     response_time: float = 0.0      # emulated batch wall (s, /compute_scale)
     queue_time: float = 0.0         # submit -> batch-drain wait (s)
     serve_time: float = 0.0         # raw host wall of the serve call (s)
+    # scored at drain: e2e (queue_time + response_time) <= deadline_ms;
+    # None until the engine serves the request
+    deadline_met: Optional[bool] = None
 
 
 class RequestBatcher:

@@ -72,7 +72,9 @@ class ServingEngine:
 
     def serve(self, batcher: RequestBatcher, spans=None):
         """Drain one batch from the batcher; fills response_time/output
-        plus the queue/serve stamps the obs layer reads."""
+        plus the queue/serve stamps the obs layer reads, and scores the
+        SLO deadline stamped at submit (``deadline_met``: end-to-end
+        queue + emulated compute against ``deadline_ms``)."""
         t_drain = time.perf_counter()
         nxt = batcher.next_batch()
         if nxt is None:
@@ -86,4 +88,6 @@ class ServingEngine:
             r.response_time = wall
             r.queue_time = max(0.0, t_drain - r.arrival_time)
             r.serve_time = raw
+            r.deadline_met = \
+                (r.queue_time + r.response_time) * 1e3 <= r.deadline_ms
         return reqs

@@ -154,7 +154,8 @@ def test_metrics_accumulator_sharded_update_bit_parity():
     defs = {"r": MetricDef(lo=-2.5, hi=0.0, bins=16, lanes=lanes),
             "eps": MetricDef(lo=0.0, hi=1.0, bins=8)}
     plain = MetricsAccumulator.create(defs)
-    placed = plain.place(lambda x: shard.shard_array(x, mesh),
+    placed = plain.place(lambda x, axis=0: shard.shard_array(x, mesh,
+                                                             axis=axis),
                          lambda x: shard.replicate(x, mesh))
     if NDEV > 1:
         assert placed.data["r"]["total"].sharding.spec[0] == "fleet"
@@ -179,6 +180,112 @@ def test_metrics_accumulator_sharded_update_bit_parity():
     # and merging the two reduces exactly (integer + extrema leaves)
     m = a.merge(b).summary()["r"]
     assert m["count"] == 2 * a.summary()["r"]["count"]
+
+
+def test_windowed_metrics_sharded_update_bit_parity():
+    """ISSUE-8: the ``(n_windows, lanes)`` ring — integer slot index on
+    the replicated window axis, elementwise along the sharded lane
+    axis — is the permitted op class, so windowed leaves stay
+    bit-identical under placement too."""
+    from repro.obs import MetricDef, MetricsAccumulator
+    mesh = _mesh()
+    lanes = 8 * NDEV
+    defs = {"r": MetricDef(lo=-2.5, hi=0.0, bins=16, lanes=lanes,
+                           n_windows=4, window_len=3)}
+    plain = MetricsAccumulator.create(defs)
+    placed = plain.place(lambda x, axis=0: shard.shard_array(x, mesh,
+                                                             axis=axis),
+                         lambda x: shard.replicate(x, mesh))
+    if NDEV > 1:
+        assert placed.data["r"]["wtotal"].sharding.spec[1] == "fleet"
+        assert placed.data["r"]["hist"].sharding.is_fully_replicated
+
+    @jax.jit
+    def roll(acc, key):
+        def body(carry, k):
+            return carry.update(
+                {"r": -2.5 * jax.random.uniform(k, (lanes,))}), None
+        acc, _ = jax.lax.scan(body, acc, jax.random.split(key, 10))
+        return acc
+
+    a, b = (roll(acc, jax.random.PRNGKey(4)) for acc in (plain, placed))
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    if NDEV > 1:                                     # layout survived scan
+        assert b.data["r"]["wcount"].sharding.spec[1] == "fleet"
+
+
+def test_windowed_training_bit_parity_and_matches_unwindowed():
+    """ISSUE-8 acceptance: a windowed FleetQLearning run is (a)
+    bit-identical sharded vs single-device on every leaf including the
+    ring, and (b) bit-identical on the shared (un-windowed) leaves and
+    the Q-table to a run with windows off — windows only ADD telemetry,
+    they never perturb training."""
+    cfg = _full_cfg(8 * NDEV)
+    w = dict(n_windows=4, window_len=10)
+    a = FleetQLearning(SyntheticSource(cfg), cfg=FleetQConfig(), seed=3,
+                       **w)
+    b = FleetQLearning(SyntheticSource(cfg), cfg=FleetQConfig(), seed=3,
+                       mesh=_mesh(), **w)
+    off = FleetQLearning(SyntheticSource(cfg), cfg=FleetQConfig(), seed=3)
+    for agent in (a, b, off):
+        agent.run(40)
+    np.testing.assert_array_equal(np.asarray(a.q), np.asarray(b.q))
+    for name, da in a.metrics.data.items():
+        db = b.metrics.data[name]
+        for leaf in ("count", "hist", "underflow", "overflow",
+                     "wcount", "wmn", "wmx"):
+            np.testing.assert_array_equal(np.asarray(da[leaf]),
+                                          np.asarray(db[leaf]))
+        np.testing.assert_allclose(np.asarray(da["wtotal"]),
+                                   np.asarray(db["wtotal"]), rtol=1e-6)
+    # (b) windows on vs off: training stream untouched
+    np.testing.assert_array_equal(np.asarray(a.q), np.asarray(off.q))
+    _assert_scen_equal(a.scen, off.scen)
+    for name, da in a.metrics.data.items():
+        do = off.metrics.data[name]
+        for leaf in do:                              # shared leaves only
+            np.testing.assert_array_equal(np.asarray(da[leaf]),
+                                          np.asarray(do[leaf]))
+    # and the ring is self-consistent: per-window counts sum to totals
+    s = a.metrics_summary()["reward"]
+    assert sum(s["windows"]["count"]) == s["count"]
+
+
+def test_windowed_ring_sums_property():
+    """Hypothesis property (ISSUE-8): for any update stream, per-window
+    counts sum EXACTLY to the whole-run count (integer leaves), and the
+    float window totals sum to the run total within reassociation ULPs."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    from repro.obs import MetricDef, MetricsAccumulator
+
+    @hyp.given(st.data())
+    @hyp.settings(max_examples=20, deadline=None)
+    def run(data):
+        lanes = data.draw(st.integers(1, 4), label="lanes")
+        n_windows = data.draw(st.integers(1, 5), label="n_windows")
+        window_len = data.draw(st.integers(1, 4), label="window_len")
+        steps = data.draw(st.integers(0, 24), label="steps")
+        vals = data.draw(st.lists(
+            st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                     min_size=lanes, max_size=lanes),
+            min_size=steps, max_size=steps), label="vals")
+        acc = MetricsAccumulator.create(
+            {"m": MetricDef(lo=-10.0, hi=10.0, bins=8, lanes=lanes,
+                            n_windows=n_windows, window_len=window_len)})
+        for row in vals:
+            acc = acc.update({"m": jnp.asarray(row, jnp.float32)})
+        d = acc.data["m"]
+        np.testing.assert_array_equal(
+            np.asarray(d["wcount"]).sum(0), np.asarray(d["count"]))
+        np.testing.assert_allclose(
+            np.asarray(d["wtotal"], np.float64).sum(0),
+            np.asarray(d["total"], np.float64), rtol=1e-5, atol=1e-4)
+        assert int(acc.step) == steps
+
+    run()
 
 
 def test_holdout_reward_ratio_bit_parity():

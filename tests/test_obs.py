@@ -1,4 +1,4 @@
-"""repro.obs (ISSUE-6): host-sync-free fleet telemetry.
+"""repro.obs (ISSUE-6 + ISSUE-8): host-sync-free fleet telemetry.
 
 Covers: MetricsAccumulator correctness against numpy, chunked-merge
 equality (exact on integer leaves and extrema, ULP-tolerant on float
@@ -9,6 +9,16 @@ SpanRecorder + Chrome trace-event schema validation, run manifests,
 hot_edges in RouteResult.summary(), the end-to-end gap_breakdown
 acceptance (both exact sum identities against a real ServingEngine
 batch), and tools/obsview.py via subprocess.
+
+ISSUE-8 (time-resolved telemetry): windowed ring leaves (slot
+arithmetic, wrap, windows-on/off update equality on the shared
+leaves), explicit underflow/overflow counters + the clipped-quantile
+UserWarning regression, the two-source quantile agreement bound
+(exact order statistics vs histogram midpoints within one bin width),
+SLO attainment identities end-to-end against a real ServingEngine
+(attained + violated == dispatched at every granularity, request.e2e
+spans reproducing the served e2e stream, the slo.attainment counter
+track), and obsview --timeline rendering.
 """
 import json
 import os
@@ -410,3 +420,268 @@ def test_obsview_show_and_diff(tmp_path):
     assert res.returncode == 0, res.stderr
     assert "+50.0%" in res.stdout and "<--" in res.stdout
     assert "1 metric(s) moved" in res.stdout
+
+
+# ------------------------------------------ ISSUE-8: windowed metrics -----
+def test_windowed_ring_slots_wrap_and_series():
+    """Slot arithmetic: updates land in (step // window_len) %
+    n_windows; the ring wraps and summary()/window_series flag it."""
+    acc = MetricsAccumulator.create(
+        {"m": MetricDef(lo=0.0, hi=10.0, bins=4, lanes=2,
+                        n_windows=3, window_len=2)})
+    # 8 updates of a 3x2-step ring -> slots 0,0,1,1,2,2,0,0 (wrapped)
+    for t in range(8):
+        acc = acc.update({"m": jnp.asarray([float(t), float(t)])})
+    d = acc.data["m"]
+    np.testing.assert_array_equal(np.asarray(d["wcount"]),
+                                  [[4, 4], [2, 2], [2, 2]])
+    # slot 0 holds steps {0,1,6,7}: total 14, min 0, max 7 per lane
+    np.testing.assert_allclose(np.asarray(d["wtotal"])[0], [14.0, 14.0])
+    np.testing.assert_allclose(np.asarray(d["wmn"])[0], [0.0, 0.0])
+    np.testing.assert_allclose(np.asarray(d["wmx"])[0], [7.0, 7.0])
+    s = acc.summary()["m"]
+    w = s["windows"]
+    assert w["n_windows"] == 3 and w["window_len"] == 2
+    assert w["count"] == [8, 4, 4]
+    assert sum(w["count"]) == s["count"]
+    assert w["wrapped"] is True
+    assert w["last_slot"] == 0                       # step 7 -> slot 0
+    from repro.obs import window_series
+    rows = window_series(s)
+    assert [r[0] for r in rows] == [0, 1, 2]
+    assert rows[1] == (1, 4, pytest.approx(2.5), pytest.approx(2.0),
+                       pytest.approx(3.0))
+    # un-windowed stream: no windows block, empty series
+    plain = _acc().summary()["r"]
+    assert "windows" not in plain and window_series(plain) == []
+
+
+def test_windowed_empty_slots_and_def_validation():
+    acc = MetricsAccumulator.create(
+        {"m": MetricDef(n_windows=4, window_len=5)})
+    acc = acc.update({"m": jnp.asarray([0.5])})      # only slot 0 touched
+    w = acc.summary()["m"]["windows"]
+    assert w["count"] == [1, 0, 0, 0]
+    assert w["mean"][1] is None and w["min"][1] is None
+    assert w["wrapped"] is False and w["last_slot"] == 0
+    with pytest.raises(ValueError, match="n_windows"):
+        MetricDef(n_windows=-1)
+    with pytest.raises(ValueError, match="n_windows"):
+        MetricDef(n_windows=2, window_len=0)
+
+
+def test_windowed_merge_and_chunked_step_clock():
+    """Positional window merge (shard semantics) + the self-clock:
+    chunked scans resume the SAME accumulator, so the step counter —
+    and hence slot assignment — continues across chunks."""
+    mk = lambda: MetricsAccumulator.create(  # noqa: E731
+        {"m": MetricDef(lo=0.0, hi=1.0, bins=4, lanes=2,
+                        n_windows=2, window_len=2)})
+
+    @jax.jit
+    def chunk(acc, xs):
+        def body(c, x):
+            return c.update({"m": x}), None
+        acc, _ = jax.lax.scan(body, acc, xs)
+        return acc
+
+    xs = jnp.linspace(0.0, 1.0, 16).reshape(8, 2)
+    whole = chunk(mk(), xs)
+    split = chunk(chunk(mk(), xs[:3]), xs[3:])       # uneven chunks
+    for la, lb in zip(jax.tree_util.tree_leaves(whole),
+                      jax.tree_util.tree_leaves(split)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert int(whole.step) == 8
+    # positional merge: counts add slot-by-slot, extrema min/max
+    m = whole.merge(whole)
+    np.testing.assert_array_equal(np.asarray(m.data["m"]["wcount"]),
+                                  2 * np.asarray(whole.data["m"]["wcount"]))
+    assert int(m.step) == 8                          # max, not sum
+
+
+# ------------------- ISSUE-8: underflow/overflow + quantile agreement -----
+def test_underflow_overflow_counts_and_quantile_warns():
+    """Regression (edge-bin fix): out-of-range mass is COUNTED, not
+    silently folded — and quantiles() warns when the bound is void."""
+    acc = MetricsAccumulator.create(
+        {"m": MetricDef(lo=0.0, hi=1.0, bins=4, lanes=1)})
+    acc = acc.update({"m": jnp.asarray([-5.0, -1.0, 0.5, 2.0])})
+    s = acc.summary()["m"]
+    assert s["underflow"] == 2 and s["overflow"] == 1
+    assert sum(s["hist"]) == s["count"] == 4         # mass still conserved
+    with pytest.warns(UserWarning, match="underflow"):
+        q = acc.quantiles("m")
+    assert q["clipped"] and q["underflow"] == 2 and q["overflow"] == 1
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")               # warn=False is silent
+        q2 = acc.quantiles("m", warn=False)
+    assert q2["p50"] == q["p50"]
+    # in-range stream: no counts, no warning, clipped False
+    clean = MetricsAccumulator.create(
+        {"m": MetricDef(lo=0.0, hi=1.0, bins=4, lanes=1)})
+    clean = clean.update({"m": jnp.asarray([0.1, 0.6])})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        qc = clean.quantiles("m")
+    assert not qc["clipped"]
+    assert clean.summary()["m"]["underflow"] == 0
+
+
+def test_exact_vs_hist_quantiles_within_bin_width():
+    from repro.obs import timeline
+    rng = np.random.default_rng(3)
+    vals = rng.gamma(2.0, 200.0, size=500)           # skewed, latency-like
+    acc = MetricsAccumulator.create(
+        {"ms": MetricDef(lo=0.0, hi=float(vals.max()) + 1.0, bins=64)})
+    for v in vals:
+        acc = acc.update({"ms": jnp.asarray([v], jnp.float32)})
+    exact = timeline.exact_quantiles(vals)
+    hist = acc.quantiles("ms")
+    assert not hist["clipped"] and hist["n"] == 500
+    for k in ("p50", "p90", "p95", "p99"):
+        assert abs(exact[k] - hist[k]) <= hist["bin_width"] + 1e-9, k
+        # and the exact source really is an order statistic
+        assert exact[k] in vals
+    # empty + malformed inputs
+    assert timeline.exact_quantiles([]) == {}
+    assert timeline.hist_quantiles([0, 0], [0.0, 0.5, 1.0])["n"] == 0
+    with pytest.raises(ValueError, match="len\\(hist\\)\\+1"):
+        timeline.hist_quantiles([1, 2], [0.0, 1.0])
+    att = timeline.attainment([1.0, 2.0, 3.0], 2.0)
+    assert att == (2, 1) and sum(att) == 3
+
+
+# --------------------------------- ISSUE-8: SLO through the bridge --------
+def test_slo_end_to_end_with_real_engines():
+    """ISSUE-8 acceptance: RouteResult.slo() satisfies attained +
+    violated == dispatched per (tier, variant) against a REAL
+    ServingEngine, the request.e2e spans reproduce the served e2e
+    stream, and both quantile sources agree within one bin width."""
+    from repro.launch.serve import build_engines, get_config
+    src = TraceSource.load(FIXTURE)
+    agent = FleetQLearning(src, seed=0)
+    agent.run(src.horizon)
+    engines = build_engines(get_config("edge-ladder"), variants=("d0",),
+                            max_len=48)
+    rec = SpanRecorder()
+    res = FleetOrchestrator(agent).route(
+        dispatch=engines, max_new_tokens=2, batch_size=4, prompt_len=8,
+        spans=rec)
+    slo = res.slo()
+    n = slo["requests"]
+    assert n == len(res.served) > 0
+    from repro.fleet.dynamics import MAX_RESPONSE_MS
+    assert slo["deadline_ms"] == MAX_RESPONSE_MS     # the QoS default
+    for side in ("measured", "predicted"):
+        assert slo[side]["attained"] + slo[side]["violated"] == n
+        assert slo[side]["attainment"] == slo[side]["attained"] / n
+    assert sum(tv["dispatched"]
+               for tv in slo["per_tier_variant"].values()) == n
+    for tv in slo["per_tier_variant"].values():
+        assert tv["measured_attained"] + tv["measured_violated"] \
+            == tv["dispatched"]
+        assert tv["predicted_attained"] + tv["predicted_violated"] \
+            == tv["dispatched"]
+    # per-request stamps are scored, and e2e = queue + compute
+    for r in res.served:
+        assert r.deadline_met is not None
+        assert r.deadline_met == (r.e2e_ms <= r.deadline_ms)
+        assert r.e2e_ms == pytest.approx(r.queue_ms + r.measured_ms)
+    # the request.e2e spans ARE the host-exact quantile source
+    durs = np.sort(np.asarray(rec.durations_ms("request.e2e")))
+    e2e = np.sort(np.asarray([r.e2e_ms for r in res.served]))
+    assert durs.size == n
+    np.testing.assert_allclose(durs, e2e, rtol=1e-6)
+    from repro.obs import timeline
+    assert slo["quantiles"]["exact_ms"] == timeline.exact_quantiles(e2e)
+    # two-source agreement (guarded by the explicit clipped flag)
+    hist = slo["quantiles"]["hist_ms"]
+    if not hist["clipped"]:
+        for k in ("p50", "p90", "p95", "p99"):
+            assert abs(slo["quantiles"]["exact_ms"][k] - hist[k]) \
+                <= hist["bin_width"] + 1e-9, k
+    # the counter track rides the trace and ends at the final split
+    cnt = [e for e in rec.events
+           if e["ph"] == "C" and e["name"] == "slo.attainment"]
+    assert cnt and cnt[-1]["args"]["attained"] == slo["measured"]["attained"]
+    assert cnt[-1]["args"]["violated"] == slo["measured"]["violated"]
+    validate_chrome_trace(rec.chrome_trace())
+    # summary carries it
+    assert res.summary()["slo"]["requests"] == n
+
+
+def test_slo_deadline_override_forces_violations():
+    """An impossible deadline violates every request — the identity
+    holds in the all-violated regime and predicted tracks the same
+    deadline."""
+    from repro.launch.serve import build_engines, get_config
+    src = TraceSource.load(FIXTURE)
+    agent = FleetQLearning(src, seed=0)
+    agent.run(4)
+    engines = build_engines(get_config("edge-ladder"), variants=("d0",),
+                            max_len=48)
+    res = FleetOrchestrator(agent).route(
+        dispatch=engines, max_new_tokens=2, batch_size=4, prompt_len=8,
+        deadline_ms=1e-3)
+    slo = res.slo()
+    n = slo["requests"]
+    assert slo["deadline_ms"] == pytest.approx(1e-3)
+    assert slo["measured"] == {"attained": 0, "violated": n,
+                               "attainment": 0.0}
+    assert slo["predicted"]["attained"] + slo["predicted"]["violated"] == n
+    assert all(r.deadline_met is False for r in res.served)
+    # lat_acc sized off the deadline: everything overflows, flagged
+    hist = slo["quantiles"]["hist_ms"]
+    assert hist["clipped"] and hist["overflow"] == n
+
+
+def test_slo_none_without_dispatch():
+    orch = FleetOrchestrator(_trained_topo_agent())
+    res = orch.route(as_result=True)
+    assert res.slo() is None
+    assert res.lat_acc is None
+    assert "slo" not in res.summary()
+
+
+def test_obsview_timeline(tmp_path):
+    """--timeline renders windows + SLO blocks from a stamped JSON."""
+    acc = MetricsAccumulator.create(
+        {"reward": MetricDef(lo=-2.5, hi=0.0, bins=8, lanes=2,
+                             n_windows=2, window_len=2)})
+    for v in (-0.5, -1.5, -0.25, -2.0):
+        acc = acc.update({"reward": jnp.asarray([v, v])})
+    payload = attach_manifest({
+        "training": acc.summary(),
+        "slo": {
+            "deadline_ms": 2500.0, "requests": 4,
+            "measured": {"attained": 3, "violated": 1,
+                         "attainment": 0.75},
+            "predicted": {"attained": 4, "violated": 0,
+                          "attainment": 1.0},
+            "attainment_gap": 0.25,
+            "per_tier_variant": {"E/d0": {
+                "dispatched": 4, "attainment_measured": 0.75,
+                "attainment_predicted": 1.0}},
+            "quantiles": {"exact_ms": {"p50": 100.0, "p99": 400.0},
+                          "hist_ms": {"p50": 110.0, "p99": 390.0,
+                                      "bin_width": 50.0,
+                                      "clipped": False}},
+        }})
+    p = tmp_path / "run.json"
+    p.write_text(json.dumps(payload))
+    res = _run_obsview("--timeline", str(p))
+    assert res.returncode == 0, res.stderr
+    out = res.stdout
+    assert "windows  training.reward" in out and "<- last" in out
+    assert "slo  slo" in out and "75.0%" in out and "+25.0%" in out
+    assert "E/d0" in out and "bin_width = 50" in out
+    # plain show / diff untouched by the new mode; exclusivity enforced
+    bad = _run_obsview("--timeline", "--diff", str(p), str(p))
+    assert bad.returncode != 0
+    # a run without any time-resolved blocks says so instead of failing
+    q = tmp_path / "plain.json"
+    q.write_text(json.dumps(attach_manifest({"x": 1.0})))
+    res2 = _run_obsview("--timeline", str(q))
+    assert res2.returncode == 0, res2.stderr
+    assert "no windowed metrics" in res2.stdout

@@ -168,6 +168,8 @@ def _bench_payload(**overrides):
         "trace_env_steps_per_s": 5e5, "sharded_env_steps_per_s": 2e5,
         "dqn_holdout_reward_ratio": 1.0, "dqn_obs_overhead_x": 1.0,
         "trace_serving_gap_x": 7.0,
+        "slo_attainment_measured": 0.9, "slo_attainment_predicted": 1.0,
+        "p99_ms": 2000.0, "windowed_overhead_x": 1.0,
     }
     metrics.update(overrides)
     return attach_manifest(metrics)
@@ -195,6 +197,27 @@ def test_benchgate_regression_fails(tmp_path):
     assert res.returncode == 1, res.stdout + res.stderr
     assert "3 regression(s)" in res.stdout
     assert "REGR" in res.stdout
+
+
+def test_benchgate_degraded_slo_attainment_fails(tmp_path):
+    """ISSUE-8 satellite: a copy whose SLO metrics degraded exits 1 —
+    attainment gates on an absolute floor (0.50), p99 and the windowed
+    overhead on lower-better bands."""
+    base = _write(tmp_path / "base.json", _bench_payload())
+    bad = _write(tmp_path / "bad.json", _bench_payload(
+        slo_attainment_measured=0.3,    # below the 0.50 floor
+        p99_ms=5000.0,                  # 2.5x the baseline tail (tol 60%)
+        windowed_overhead_x=1.5))       # windows suddenly cost 50%
+    res = _gate(base, bad)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "3 regression(s)" in res.stdout
+    for key in ("slo_attainment_measured", "p99_ms",
+                "windowed_overhead_x"):
+        assert key in res.stdout
+    # attainment at the floor still passes even if below baseline
+    ok = _write(tmp_path / "ok.json", _bench_payload(
+        slo_attainment_measured=0.55))
+    assert _gate(base, ok).returncode == 0
 
 
 def test_benchgate_improvement_passes(tmp_path):

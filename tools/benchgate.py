@@ -49,6 +49,14 @@ RULES = {
     "dqn_holdout_reward_ratio":   ("floor", 0.95),
     "dqn_obs_overhead_x":         ("lower", 0.10),
     "trace_serving_gap_x":        ("lower", 0.60),
+    # ISSUE 8 — SLO attainment through the serving bridge. Attainment
+    # fractions gate on absolute floors (a fraction of requests meeting
+    # the QoS deadline, not a throughput); p99 and the windowed-metrics
+    # overhead ratio are wall-clock-ish and get the wide CI bands.
+    "slo_attainment_measured":    ("floor", 0.50),
+    "slo_attainment_predicted":   ("floor", 0.50),
+    "p99_ms":                     ("lower", 0.60),
+    "windowed_overhead_x":        ("lower", 0.10),
 }
 
 #: manifest fields that must match for numbers to be comparable

@@ -1,6 +1,6 @@
 """CI observability smoke: instrumented train + route on tiny budgets.
 
-Four gates (ISSUE 6):
+Five gates (ISSUE 6 + the ISSUE 8 SLO identity):
   1. an instrumented FleetQLearning training run records coherent
      in-scan metrics (counts match, rewards inside the dynamics range);
   2. a span-instrumented route(dispatch=real engines) emits trace JSON
@@ -8,7 +8,13 @@ Four gates (ISSUE 6):
   3. the gap_breakdown components satisfy both exact sum identities
      (per-request queueing+compute == e2e; wall batching+compute+
      dispatch == total);
-  4. metrics overhead: instrumented vs uninstrumented FleetDQN RL-loop
+  4. SLO accounting is exact: attained + violated == dispatched
+     requests overall AND per (tier, variant), the `request.e2e` span
+     durations reproduce the served e2e latencies, the trace carries
+     the `slo.attainment` counter track, and the histogram quantiles
+     agree with the host-exact ones within one bin width (unless the
+     accumulator's underflow/overflow counts flag clipping);
+  5. metrics overhead: instrumented vs uninstrumented FleetDQN RL-loop
      throughput < OVERHEAD_GATE, best-of-N with retries so CI timer
      noise doesn't flake the gate. The budget (128 cells, chunk 200)
      is the smallest where per-chunk host dispatch is amortized; at
@@ -89,10 +95,48 @@ def train_and_route():
     validate_chrome_trace(trace)
     names = {e["name"] for e in trace["traceEvents"]}
     need = {"route.decide", "route.dispatch", "dispatch.batch_build",
-            "engine.generate", "engine.prefill", "engine.decode"}
+            "engine.generate", "engine.prefill", "engine.decode",
+            "request.e2e"}
     check("trace.schema_and_spans", need <= names,
           f"{len(trace['traceEvents'])} events -> {path}")
-    del np  # imported for parity with the test suite's usage
+
+    # gate 4: SLO accounting is exact at every granularity
+    slo = res.slo()
+    n, m, p = slo["requests"], slo["measured"], slo["predicted"]
+    check("slo.measured_identity", m["attained"] + m["violated"] == n,
+          f"{m['attained']} + {m['violated']} == {n}")
+    check("slo.predicted_identity", p["attained"] + p["violated"] == n,
+          f"{p['attained']} + {p['violated']} == {n}")
+    check("slo.per_tier_identity",
+          all(tv["measured_attained"] + tv["measured_violated"]
+              == tv["dispatched"]
+              and tv["predicted_attained"] + tv["predicted_violated"]
+              == tv["dispatched"]
+              for tv in slo["per_tier_variant"].values())
+          and sum(tv["dispatched"]
+                  for tv in slo["per_tier_variant"].values()) == n,
+          f"{len(slo['per_tier_variant'])} (tier, variant) group(s)")
+    e2e = np.sort(np.asarray([r.e2e_ms for r in res.served]))
+    spans_ms = np.sort(np.asarray(rec.durations_ms("request.e2e")))
+    check("slo.spans_match_served",
+          spans_ms.size == e2e.size
+          and np.allclose(spans_ms, e2e, rtol=1e-6),
+          f"{spans_ms.size} request.e2e span(s)")
+    check("slo.counter_track",
+          any(e["ph"] == "C" and e["name"] == "slo.attainment"
+              for e in trace["traceEvents"]))
+    q = slo["quantiles"]
+    exact, hist = q["exact_ms"], q["hist_ms"]
+    if hist["clipped"]:
+        print("[obs_smoke] skip slo.quantile_bound — histogram clipped "
+              f"(underflow {hist['underflow']}, overflow "
+              f"{hist['overflow']})", flush=True)
+    else:
+        worst = max(abs(exact[k] - hist[k])
+                    for k in ("p50", "p90", "p95", "p99"))
+        check("slo.quantile_bound", worst <= hist["bin_width"] + 1e-9,
+              f"max |exact - hist| {worst:.1f} <= bin "
+              f"{hist['bin_width']:.1f} ms")
 
 
 def overhead_gate():

@@ -15,6 +15,8 @@ Usage:
       [--fail-on-move]                  # exit 1 if anything moved
   python tools/obsview.py --history [results/history.jsonl]
       [--name BENCH_fleet] [--filter steps_per_s] [--last 12]
+  python tools/obsview.py --timeline run.json
+      # render windowed learning-curve series + SLO attainment tables
 
 Flattening and the relative-diff rule are shared with the
 ``tools/benchgate.py`` regression gate via ``repro.obs.report``. A
@@ -30,6 +32,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.obs.report import flatten, is_number, rel_diff  # noqa: E402
+from repro.obs.timeline import window_series  # noqa: E402
 
 
 def load(path) -> dict:
@@ -116,6 +119,90 @@ def diff(path_a: str, path_b: str, threshold: float) -> int:
     return moved
 
 
+def _walk_dicts(obj, path=()):
+    """Yield every nested dict with its dotted path (lists descended)."""
+    if isinstance(obj, dict):
+        yield path, obj
+        for k, v in obj.items():
+            yield from _walk_dicts(v, path + (str(k),))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _walk_dicts(v, path + (str(i),))
+
+
+def _opt(v) -> str:
+    return fmt(v) if v is not None else "·"
+
+
+def timeline_view(path: str) -> int:
+    """Render every windowed metric series and SLO attainment block in
+    a stamped run JSON; returns the number of blocks rendered (0 means
+    the run carried no time-resolved telemetry)."""
+    payload = load(path)
+    print(path)
+    for line in manifest_lines(payload):
+        print(line)
+    rendered = 0
+    for p, node in _walk_dicts(payload):
+        w = node.get("windows")
+        if not (isinstance(w, dict) and "count" in w):
+            continue
+        rendered += 1
+        name = ".".join(p) or "(root)"
+        tag = ", wrapped (ring lapped)" if w.get("wrapped") else ""
+        print(f"\n  windows  {name}  [n_windows={w.get('n_windows')} "
+              f"window_len={w.get('window_len')}{tag}]")
+        print(f"    {'slot':>4}  {'count':>8}  {'mean':>12}  "
+              f"{'min':>12}  {'max':>12}")
+        for slot, count, mean, mn, mx in window_series(node):
+            mark = "  <- last" if slot == w.get("last_slot") else ""
+            print(f"    {slot:>4}  {count:>8}  {_opt(mean):>12}  "
+                  f"{_opt(mn):>12}  {_opt(mx):>12}{mark}")
+    for p, node in _walk_dicts(payload):
+        if not ("deadline_ms" in node and "measured" in node
+                and "per_tier_variant" in node):
+            continue
+        rendered += 1
+        name = ".".join(p) or "(root)"
+        m, pr = node["measured"], node["predicted"]
+        print(f"\n  slo  {name}  [deadline {fmt(node['deadline_ms'])} ms, "
+              f"{node['requests']} request(s)]")
+        print(f"    {'':<12}  {'attained':>8}  {'violated':>8}  "
+              f"{'attainment':>10}")
+        print(f"    {'measured':<12}  {m['attained']:>8}  "
+              f"{m['violated']:>8}  {m['attainment']:>10.1%}")
+        print(f"    {'predicted':<12}  {pr['attained']:>8}  "
+              f"{pr['violated']:>8}  {pr['attainment']:>10.1%}")
+        print(f"    attainment gap (predicted - measured): "
+              f"{node['attainment_gap']:+.1%}")
+        per = node["per_tier_variant"]
+        if per:
+            width = max(len(k) for k in per)
+            for key in sorted(per):
+                tv = per[key]
+                print(f"    {key:<{width}}  "
+                      f"{tv['dispatched']:>4} dispatched  "
+                      f"measured {tv['attainment_measured']:.1%}  "
+                      f"predicted {tv['attainment_predicted']:.1%}")
+        q = node.get("quantiles") or {}
+        exact, hist = q.get("exact_ms") or {}, q.get("hist_ms") or {}
+        keys = [k for k in ("p50", "p90", "p95", "p99") if k in exact]
+        if keys:
+            print(f"    {'quantile':<10}  {'exact_ms':>12}  "
+                  f"{'hist_ms':>12}")
+            for k in keys:
+                print(f"    {k:<10}  {fmt(exact[k]):>12}  "
+                      f"{_opt(hist.get(k)):>12}")
+            if hist:
+                tag = "  CLIPPED (bound void)" if hist.get("clipped") \
+                    else ""
+                print(f"    (hist bound: one bin_width = "
+                      f"{fmt(hist.get('bin_width'))} ms{tag})")
+    if not rendered:
+        print("\n  (no windowed metrics or SLO blocks in this run)")
+    return rendered
+
+
 def history(path: str, name: str, substr: str, last: int) -> None:
     """Per-metric trajectory over the appended ``history.jsonl`` rows
     (oldest -> newest), restricted to one bench ``name`` and keys
@@ -185,6 +272,9 @@ def main() -> None:
     ap.add_argument("--history", action="store_true",
                     help="render per-metric trajectories from "
                          "history.jsonl (default results/history.jsonl)")
+    ap.add_argument("--timeline", action="store_true",
+                    help="render windowed metric series and SLO "
+                         "attainment tables from run JSONs")
     ap.add_argument("--name", default="BENCH_fleet",
                     help="history: bench name to select ('' for all)")
     ap.add_argument("--filter", default="",
@@ -193,9 +283,14 @@ def main() -> None:
     ap.add_argument("--last", type=int, default=10,
                     help="history: number of most recent runs")
     args = ap.parse_args()
-    if args.diff and args.history:
-        ap.error("--diff and --history are mutually exclusive")
-    if args.history:
+    if sum((args.diff, args.history, args.timeline)) > 1:
+        ap.error("--diff, --history and --timeline are mutually exclusive")
+    if args.timeline:
+        if not args.paths:
+            ap.error("--timeline needs at least one run JSON")
+        for p in args.paths:
+            timeline_view(p)
+    elif args.history:
         default = os.path.join(os.path.dirname(__file__), "..", "results",
                                "history.jsonl")
         path = args.paths[0] if args.paths else default
