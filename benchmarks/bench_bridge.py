@@ -1,0 +1,221 @@
+"""Async serving bridge + sim-to-real calibration loop (ISSUE-9).
+
+Two measurements over the same warmed engine fleet:
+
+1. **Bridge vs sync dispatch throughput** — route the identical
+   workload through ``FleetOrchestrator.route(dispatch=engines)`` (the
+   one-shot synchronous drain) and through ``route(..., bridge=True)``
+   (per-(tier, variant) queues with overlapped batch formation and
+   drain). The workload is a balanced three-tier spread
+   (``SpreadPolicy``: users round-robin over S/E/C, every user active)
+   against engines with EMULATED NETWORK HOPS (``HOP_MS``: a real
+   per-batch sleep for the edge/cloud tiers) — the case the bridge
+   exists for: the paper's tiers are physically separate machines whose
+   comm latency and compute genuinely overlap, a property a single
+   shared host loses (its "tiers" contend for the same cores, so
+   overlapping pure-CPU engines is a wash). The sync path pays every
+   hop serialized; the bridge overlaps them across tiers. Both paths
+   are warmed first so compile never skews the comparison; best-of-N
+   walls
+   from ``RouteResult.timings`` give ``sync_throughput_rps`` /
+   ``bridge_throughput_rps`` and their ratio ``bridge_vs_sync_x``
+   (> 1 = the overlap wins; gated by tools/benchgate.py on the bridge
+   band).
+2. **Calibration loop** — ``fleet.calibrate.calibrate_serving`` routes
+   the same spread fleet uncalibrated (so every tier contributes fit
+   data), fits per-tier (compute_scale, hop_offset_ms) coefficients
+   from the measured engine walls, routes again on the calibrated
+   model, and retrains a ``FleetDQN`` on ``CalibratedDynamics``.
+   ``calibrated_gap_x`` is the after-fit measured/predicted ratio
+   (gated as a ceiling: within 1.5x of the real engines, from an
+   uncalibrated model error of ~0.1-2.4x), and
+   ``calibrated_dqn_holdout_reward_ratio`` shows the retrained policy
+   still matches the oracle on calibrated holdout dynamics.
+
+Emits:
+  sync_throughput_rps,<rps>,one-shot synchronous drain
+  bridge_throughput_rps,<rps>,async bridge (overlapped formation/drain)
+  bridge_vs_sync_x,<ratio>,bridge/sync dispatch throughput
+  bridge_overlap_x,<ratio>,engine compute / post-submit wall
+  calibrated_gap_x,<ratio>,measured/predicted after the fit (1.0 = ideal)
+  uncalibrated_gap_x,<ratio>,the same route before the fit
+  calibrated_dqn_holdout_reward_ratio,<frac>,retrained policy vs oracle
+
+``--tiny`` (CLI) shrinks every budget to a few seconds of work — the CI
+smoke mode that keeps the bridge AND calibration paths from rotting.
+"""
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, emit, save_json, serving_engines
+from repro.fleet import (CalibratedDynamics, FleetConfig, FleetDQN,
+                         FleetOrchestrator, SyntheticSource,
+                         apply_calibration, calibrate_serving, dynamics,
+                         init_fleet, holdout_reward_ratio)
+
+ROUTE_KW = dict(max_new_tokens=2, batch_size=4, prompt_len=8)
+
+#: per-batch network hop to the edge / cloud tiers (device tier is
+#: local) — WiFi-RTT / WAN-RTT scale, like the paper's testbed. The
+#: calibration fit absorbs these into its per-hop comm offsets.
+HOP_MS = {"E": 25.0, "C": 50.0}
+
+
+class SpreadPolicy:
+    """Balanced three-tier placement: user slots round-robin over
+    (local d0, edge, cloud). The throughput workload — loads the S/E/C
+    engines evenly so the sync-serialized drain has something for the
+    bridge to overlap, like the paper's physically-separate tiers."""
+
+    def __init__(self, users: int):
+        self.users = users
+
+    def decisions(self, counts, scen):
+        idx = jnp.arange(scen.cells)[:, None] * scen.users \
+            + jnp.arange(scen.users)[None, :]
+        acts = jnp.asarray([0, dynamics.A_EDGE, dynamics.A_CLOUD])
+        return acts[idx % 3], jnp.zeros((scen.cells,), jnp.int32)
+
+
+def _rps(res) -> float:
+    """Requests per second of one dispatched route, from the same
+    ``timings['wall_ms']`` both paths account (identities hold on
+    each, so the walls are comparable end to end)."""
+    return len(res.served) / (res.timings["wall_ms"] / 1e3)
+
+
+def bench_bridge_throughput(orch, scen, engines, best_of: int = 3):
+    """Best-of-N dispatch throughput, sync drain vs async bridge, on
+    the identical warmed workload. The two paths are measured
+    INTERLEAVED (sync, bridge, sync, bridge, ...) so slow drift on the
+    host — frequency scaling, background load — hits both equally
+    instead of biasing whichever ran last."""
+    kw = dict(scen=scen, dispatch=engines, **ROUTE_KW)
+    orch.route(**kw)                      # warm the sync path
+    orch.route(bridge=True, **kw)         # warm the bridge path
+    sync_rps, bres = [], []
+    for _ in range(best_of):
+        sync_rps.append(_rps(orch.route(**kw)))
+        bres.append(orch.route(bridge=True, **kw))
+    sync = max(sync_rps)
+    bridge = max(_rps(r) for r in bres)
+    overlap = max(r.bridge["overlap_x"] for r in bres)
+    emit("sync_throughput_rps", sync,
+         "requests/s through the one-shot synchronous drain "
+         f"(best of {best_of})")
+    emit("bridge_throughput_rps", bridge,
+         "requests/s through the async bridge — overlapped batch "
+         f"formation + drain (best of {best_of})")
+    emit("bridge_vs_sync_x", bridge / sync,
+         "bridge/sync dispatch throughput (> 1 = overlap wins)")
+    emit("bridge_overlap_x", overlap,
+         "engine compute wall / post-submit dispatch wall (> 1 only "
+         "when batches genuinely overlap)")
+    return sync, bridge, overlap
+
+
+def bench_calibration(orch, scen, engines, dqn_steps: int,
+                      train_cells: int = 512, holdout_cells: int = 32):
+    """The full sim-to-real loop: fit on measured engine walls, route
+    calibrated, retrain a FleetDQN on the calibrated dynamics.
+
+    The calibrated landscape is nearly flat (testbed walls compress
+    the modeled latency range ~30x), so the oracle-vs-policy gaps live
+    in a few weak-link cells and sit at the shared net's resolution
+    floor. Two standard countermeasures keep the retrain honest AND
+    stable: a LARGE training fleet (``train_cells`` — every link
+    configuration lands in the pooled replay often enough to be
+    resolved; at 32 cells the ratio plateaus ~0.89) and EARLY STOPPING
+    on a validation fleet — the DQN oscillates through the optimum
+    rather than settling on it (observed ratio series 0.33 → 0.52 →
+    1.0 → 0.46 over one run), so the best-validation checkpoint is
+    what gets scored, on a DISJOINT holdout fleet."""
+
+    def retrain(calib):
+        cfg = FleetConfig(cells=train_cells, users=3, arrival_rate=None)
+        dqn = FleetDQN(CalibratedDynamics(SyntheticSource(cfg), calib),
+                       seed=0)
+        ecfg = FleetConfig(cells=holdout_cells, users=3,
+                           arrival_rate=None)
+        val = apply_calibration(init_fleet(jax.random.PRNGKey(11), ecfg),
+                                calib)
+        # snapshots must COPY: dqn.run donates its param buffers, so a
+        # borrowed mid-run snapshot would be deleted by later chunks
+        snap = lambda: jax.tree_util.tree_map(jnp.copy, dqn.params)
+        chunk = max(dqn_steps // 10, 16)
+        best, best_params, best_at, trained = -1.0, snap(), 0, 0
+        while trained < dqn_steps:
+            dqn.run(chunk)
+            trained += chunk
+            v = float(holdout_reward_ratio(dqn, val).ratio)
+            if v > best:
+                best, best_params, best_at = v, snap(), trained
+            if best >= 1.0 - 1e-6:
+                break
+        dqn.params = best_params
+        held = apply_calibration(init_fleet(jax.random.PRNGKey(7), ecfg),
+                                 calib)
+        ev = holdout_reward_ratio(dqn, held)
+        return {"holdout_reward_ratio": float(ev.ratio),
+                "train_steps": best_at, "budget_steps": dqn_steps,
+                "cells": holdout_cells, "train_cells": train_cells,
+                "validation_ratio": best}
+
+    report, _fit, _after = calibrate_serving(
+        orch, scen, engines, route_kw=ROUTE_KW, retrain=retrain)
+    emit("uncalibrated_gap_x", report["before"]["gap_x"],
+         "measured/predicted before the fit (warm engines; the model "
+         "error the calibration removes)")
+    emit("calibrated_gap_x", report["after"]["gap_x"],
+         "measured/predicted after fitting per-tier compute_scale + "
+         "hop_offset_ms (1.0 = the calibrated model is exact)")
+    emit("calibrated_dqn_holdout_reward_ratio",
+         report["retrained"]["holdout_reward_ratio"],
+         f"retrained-on-calibrated FleetDQN vs oracle reward on a "
+         f"{holdout_cells}-cell calibrated holdout fleet")
+    return report
+
+
+def main(tiny: bool = False):
+    if tiny:
+        cells, dqn_steps, train_cells, best_of = 8, 64, 32, 2
+    elif FAST:
+        cells, dqn_steps, train_cells, best_of = 32, 2500, 512, 5
+    else:
+        cells, dqn_steps, train_cells, best_of = 64, 3000, 512, 5
+
+    cfg = FleetConfig(cells=cells, users=3, arrival_rate=None)
+    scen = init_fleet(jax.random.PRNGKey(0), cfg)
+    orch = FleetOrchestrator(SpreadPolicy(cfg.users))
+    engines = serving_engines(hop_ms=HOP_MS)
+    sync, bridge, overlap = bench_bridge_throughput(orch, scen, engines,
+                                                    best_of=best_of)
+    report = bench_calibration(orch, scen, engines, dqn_steps,
+                               train_cells=train_cells)
+    metrics = {
+        "sync_throughput_rps": sync,
+        "bridge_throughput_rps": bridge,
+        "bridge_vs_sync_x": bridge / sync,
+        "bridge_overlap_x": overlap,
+        "uncalibrated_gap_x": report["before"]["gap_x"],
+        "calibrated_gap_x": report["after"]["gap_x"],
+        "calibrated_dqn_holdout_reward_ratio":
+            report["retrained"]["holdout_reward_ratio"],
+        # the block tools/obsview.py --timeline renders from this JSON
+        "calibration": report,
+    }
+    save_json("bridge", metrics)
+    return metrics
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale budgets (CI smoke)")
+    main(tiny=ap.parse_args().tiny)

@@ -36,12 +36,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import jax
 
 from benchmarks.bench_fleet_dqn import bench_rl
-from benchmarks.common import FAST, Timer, emit, save_json
-from repro.fleet import (FleetDQN, FleetDQNConfig, FleetOrchestrator,
-                         FleetQConfig, FleetQLearning, TraceSource)
-
-FIXTURE = os.path.join(os.path.dirname(__file__), "..", "tests", "data",
-                       "trace_small.npz")
+from benchmarks.common import (FAST, Timer, emit, save_json,
+                               trace_fixture_agent, warmed_engines)
+from repro.fleet import FleetDQN, FleetDQNConfig, FleetOrchestrator
 
 
 def bench_windowed_overhead(cells: int, steps: int, chunk: int,
@@ -66,20 +63,12 @@ def bench_slo_serving(train_steps: int, max_new_tokens: int = 2,
                       n_windows: int = 8):
     """Train on the trace fixture, dispatch through warmed engines with
     the QoS deadline stamped, and report attainment + P99."""
-    from repro.configs import get_config
-    from repro.launch.serve import build_engines
-
-    src = TraceSource.load(FIXTURE)
-    agent = FleetQLearning(src, cfg=FleetQConfig(eps_decay=5e-3), seed=0,
-                           n_windows=n_windows,
-                           window_len=max(1, train_steps // n_windows))
-    agent.run(train_steps)
-    engines = build_engines(get_config("edge-ladder"), variants=("d0",),
-                            max_len=48)
+    agent = trace_fixture_agent(train_steps, n_windows=n_windows,
+                                window_len=max(1, train_steps // n_windows))
     orch = FleetOrchestrator(agent)
-    kw = dict(dispatch=engines, max_new_tokens=max_new_tokens,
-              batch_size=4, prompt_len=8)
-    orch.route(**kw)                    # warm: compile every engine shape
+    kw = dict(max_new_tokens=max_new_tokens, batch_size=4, prompt_len=8)
+    engines = warmed_engines(orch, **kw)
+    kw = dict(dispatch=engines, **kw)
     with Timer() as t:
         res = orch.route(**kw)
     slo = res.slo()

@@ -30,10 +30,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import FAST, Timer, emit, save_json
-from repro.fleet import (FleetConfig, FleetOrchestrator, FleetQConfig,
-                         FleetQLearning, SyntheticSource, TraceSource,
-                         make_fleet_env_step, record_trace)
+from benchmarks.common import (FAST, Timer, emit, save_json,
+                               serving_engines, trace_fixture_agent)
+from repro.fleet import (FleetConfig, FleetOrchestrator, SyntheticSource,
+                         TraceSource, make_fleet_env_step, record_trace)
 from repro.obs import timeline
 
 USERS = 3
@@ -96,15 +96,8 @@ def bench_serving_bridge(train_steps: int, max_new_tokens: int = 2):
     """Train briefly on the golden trace fixture, route through the
     orchestrator, dispatch every active user to real engines, and report
     the prediction-vs-measured latency gap."""
-    from repro.configs import get_config
-    from repro.launch.serve import build_engines
-    fixture = os.path.join(os.path.dirname(__file__), "..", "tests",
-                           "data", "trace_small.npz")
-    src = TraceSource.load(fixture)
-    agent = FleetQLearning(src, cfg=FleetQConfig(eps_decay=5e-3), seed=0)
-    agent.run(train_steps)
-    engines = build_engines(get_config("edge-ladder"), variants=("d0",),
-                            max_len=48)
+    agent = trace_fixture_agent(train_steps)
+    engines = serving_engines()     # cold on purpose: compile is timed
     with Timer() as t:
         res = FleetOrchestrator(agent).route(
             dispatch=engines, max_new_tokens=max_new_tokens, batch_size=4,

@@ -48,6 +48,42 @@ def save_json(name: str, obj, **manifest_extra):
         f.write(json.dumps(row, default=str) + "\n")
 
 
+TRACE_FIXTURE = os.path.join(os.path.dirname(__file__), "..", "tests",
+                             "data", "trace_small.npz")
+
+
+def trace_fixture_agent(train_steps: int, seed: int = 0, **agent_kw):
+    """Train a ``FleetQLearning`` agent on the golden trace fixture —
+    the shared setup of every serving-path benchmark (bench_slo,
+    bench_trace_replay, bench_bridge)."""
+    from repro.fleet import FleetQConfig, FleetQLearning, TraceSource
+    src = TraceSource.load(TRACE_FIXTURE)
+    agent = FleetQLearning(src, cfg=FleetQConfig(eps_decay=5e-3),
+                           seed=seed, **agent_kw)
+    agent.run(train_steps)
+    return agent
+
+
+def serving_engines(variants=("d0",), max_len: int = 48, hop_ms=None):
+    """The edge-ladder engine fleet every serving benchmark dispatches
+    to — COLD: executables compile on first use (bench_trace_replay
+    times this deliberately). ``hop_ms`` (per-tier dict) adds real
+    network-hop sleeps emulating physically separate tiers — used by
+    bench_bridge; every other suite keeps the local (hop-free) fleet."""
+    from repro.configs import get_config
+    from repro.launch.serve import build_engines
+    return build_engines(get_config("edge-ladder"), variants=variants,
+                         max_len=max_len, hop_ms=hop_ms)
+
+
+def warmed_engines(orch, variants=("d0",), max_len: int = 48, **route_kw):
+    """``serving_engines`` plus a throwaway route through ``orch`` so
+    every engine shape is compiled before anything is timed."""
+    engines = serving_engines(variants=variants, max_len=max_len)
+    orch.route(dispatch=engines, **route_kw)
+    return engines
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

@@ -10,7 +10,8 @@ steps/sec, converged cells/sec, DQN held-out reward ratio, topology
 overhead/uplift, trace-replay speedup, sharded per-device throughput
 and local-vs-alltoall aggregation cost, compiled-cost RL stage
 fractions and the scaling-cliff diagnosis, SLO attainment measured vs
-predicted + P99 tail + windowed-metrics overhead) in one
+predicted + P99 tail + windowed-metrics overhead, async-bridge vs sync
+dispatch throughput and the sim-to-real calibration loop) in one
 machine-readable file
 so the perf trajectory is tracked across PRs (see docs/BENCHMARKS.md).
 Every JSON is stamped with a provenance manifest (git SHA, jax
@@ -21,7 +22,8 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_adaptation, bench_fig1_motivation,
+from benchmarks import (bench_adaptation, bench_bridge,
+                        bench_fig1_motivation,
                         bench_fig5_user_variability, bench_fig7_transfer,
                         bench_fleet_dqn, bench_fleet_sharded,
                         bench_fleet_throughput, bench_kernels,
@@ -49,11 +51,12 @@ SUITES = {
     "fleet_sharded": bench_fleet_sharded,  # beyond-paper: multi-device fleet
     "profile": bench_profile,  # compiled-cost stage fracs + cliff diagnosis
     "slo": bench_slo,  # windowed metrics overhead + SLO attainment/tails
+    "bridge": bench_bridge,  # async bridge throughput + calibration loop
 }
 
 #: suites whose main() returns the headline dict folded into BENCH_fleet.json
 FLEET_SUITES = ("fleet", "fleet_dqn", "topology", "trace_replay",
-                "fleet_sharded", "profile", "slo")
+                "fleet_sharded", "profile", "slo", "bridge")
 
 
 def main() -> None:
@@ -89,6 +92,7 @@ def main() -> None:
         sh = fleet_metrics.get("fleet_sharded", {})
         prof = fleet_metrics.get("profile", {})
         slo = fleet_metrics.get("slo", {})
+        br = fleet_metrics.get("bridge", {})
         save_json("BENCH_fleet", {
             "env_steps_per_s": tp.get("fleet_env_steps_per_s"),
             "rl_steps_per_s": tp.get("fleet_rl_steps_per_s"),
@@ -109,6 +113,14 @@ def main() -> None:
             "slo_attainment_gap": slo.get("slo_attainment_gap"),
             "p99_ms": slo.get("p99_ms"),
             "windowed_overhead_x": slo.get("windowed_overhead_x"),
+            "sync_throughput_rps": br.get("sync_throughput_rps"),
+            "bridge_throughput_rps": br.get("bridge_throughput_rps"),
+            "bridge_vs_sync_x": br.get("bridge_vs_sync_x"),
+            "uncalibrated_gap_x": br.get("uncalibrated_gap_x"),
+            "calibrated_gap_x": br.get("calibrated_gap_x"),
+            "calibrated_dqn_holdout_reward_ratio":
+                br.get("calibrated_dqn_holdout_reward_ratio"),
+            "calibration": br.get("calibration"),
             "sharded_devices": sh.get("devices"),
             "sharded_env_steps_per_s": sh.get("sharded_env_steps_per_s"),
             "sharded_per_device_env_steps_per_s":

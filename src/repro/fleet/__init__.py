@@ -14,11 +14,14 @@ door (ScenarioSource / FleetPolicy / route-to-serving); see its
 docstring and README.md.
 """
 from repro.fleet import dynamics
-from repro.fleet.dynamics import (accuracies, cell_response_times,
-                                  expected_response, feasible,
+from repro.fleet.dynamics import (Calibration, accuracies,
+                                  calibrated_response_times,
+                                  cell_response_times, expected_response,
+                                  feasible,
                                   fleet_actions_expected_response,
-                                  fleet_expected_response, response_times,
-                                  reward, t_comp_device)
+                                  fleet_expected_response,
+                                  response_components, response_times,
+                                  reward, t_comp_device, user_tier)
 
 _SCENARIOS = ("FleetConfig", "FleetScenario", "arrivals_from_timestamps",
               "diurnal_rate", "heterogeneous_sizes", "init_fleet",
@@ -50,13 +53,17 @@ _SHARD = ("FLEET_AXIS", "check_shard_local", "constrain_array",
           "shard_topology")
 _POLICY = ("FleetDQN", "FleetDQNConfig", "HoldoutEval",
            "encode_fleet_state", "holdout_reward_ratio")
+_CALIBRATE = ("CalibratedDynamics", "CalibrationFit", "apply_calibration",
+              "calibrate_serving", "calibration_report", "fit_calibration")
 
 __all__ = [
-    "dynamics", "accuracies", "cell_response_times", "expected_response",
-    "feasible", "fleet_actions_expected_response",
-    "fleet_expected_response", "response_times", "reward", "t_comp_device",
+    "dynamics", "Calibration", "accuracies", "calibrated_response_times",
+    "cell_response_times", "expected_response", "feasible",
+    "fleet_actions_expected_response", "fleet_expected_response",
+    "response_components", "response_times", "reward", "t_comp_device",
+    "user_tier",
     *_SCENARIOS, *_POPULATION, *_API, *_REPLAY, *_POLICY, *_TOPOLOGY,
-    *_SHARD,
+    *_SHARD, *_CALIBRATE,
 ]
 
 
@@ -76,9 +83,11 @@ def __getattr__(name):
         mod = importlib.import_module("repro.fleet.topology")
     elif name in _SHARD or name == "shard":
         mod = importlib.import_module("repro.fleet.shard")
+    elif name in _CALIBRATE or name == "calibrate":
+        mod = importlib.import_module("repro.fleet.calibrate")
     else:
         raise AttributeError(
             f"module 'repro.fleet' has no attribute {name!r}")
     return (mod if name in ("scenarios", "population", "api", "replay",
-                            "policy", "topology", "shard")
+                            "policy", "topology", "shard", "calibrate")
             else getattr(mod, name))

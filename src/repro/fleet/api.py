@@ -606,6 +606,9 @@ class RouteResult:
     #: e2e stream during dispatch (histogram source of ``slo()``'s
     #: quantiles; None when nothing was dispatched)
     lat_acc: Optional[MetricsAccumulator] = None
+    #: async-bridge outcome (``ServingBridge.stats()`` + per-shed
+    #: request detail); None on the synchronous dispatch path
+    bridge: Optional[dict] = None
 
     @property
     def predicted_ms(self) -> np.ndarray:
@@ -766,6 +769,8 @@ class RouteResult:
         slo = self.slo()
         if slo is not None:
             s["slo"] = slo
+        if self.bridge is not None:
+            s["bridge"] = self.bridge
         return s
 
 
@@ -818,10 +823,11 @@ class FleetOrchestrator:
         under the current request mask (inactive users predict 0)."""
         if scen.topo is None:
             return dynamics.response_times(dec, scen.end_b, scen.edge_b,
-                                           active=scen.active, xp=jnp)
+                                           active=scen.active,
+                                           calib=scen.calib, xp=jnp)
         return topology.topology_response_times(dec, scen.end_b, scen.edge_b,
                                                 scen.topo, active=scen.active,
-                                                xp=jnp)
+                                                calib=scen.calib, xp=jnp)
 
     def _dispatch(self, dec, scen: FleetScenario, engines,
                   prompts: Optional[Callable], max_new_tokens: int,
@@ -940,6 +946,150 @@ class FleetOrchestrator:
                 [r.e2e_ms for r in served], jnp.float32)})
         return served, batches, timings, lat
 
+    def _dispatch_bridge(self, dec, scen: FleetScenario, engines, bridge,
+                         prompts: Optional[Callable], max_new_tokens: int,
+                         batch_size: int, prompt_len: int, seed: int,
+                         spans=None, deadline_ms: float = float("inf")):
+        """Async twin of ``_dispatch``: submit every active request into
+        a ``ServingBridge`` (per-(tier, variant) worker queues, see
+        ``repro.serving.bridge``) and drain the fleet with the S/E/C
+        engines overlapped.
+
+        Identities preserved: per request ``queueing + compute == e2e``
+        and the wall decomposition ``batching + compute + dispatch ==
+        total`` still hold exactly — but ``compute_ms`` sums engine
+        walls that ran CONCURRENTLY, so the residual ``dispatch_ms``
+        may be negative (overlap won back); only the synchronous path
+        guarantees ``dispatch >= 0``. Requests the bridge shed (bounded
+        queues, exhausted deadlines, engine timeouts) are NOT in
+        ``served`` — they surface with reasons in the returned bridge
+        stats (``RouteResult.summary()['bridge']``), and the SLO
+        identity attained + violated == dispatched holds over the
+        served set.
+        """
+        from repro.serving import Request
+        from repro.serving.bridge import BridgeConfig, ServingBridge
+        t0 = time.perf_counter()
+        dec_np = np.asarray(dec)
+        active = np.asarray(scen.active)
+        pred = np.asarray(self._predicted_per_user_ms(dec, scen))
+        local = sorted(int(v[1:]) for v in engines.get("S", {}))
+        any_tier = next(iter(engines.values()), {})
+        any_eng = next(iter(any_tier.values()), None)
+        if any_eng is None:
+            raise ValueError("dispatch= needs a non-empty "
+                             "{tier: {variant: ServingEngine}} dict "
+                             "(see repro.launch.serve.build_engines)")
+        vocab = int(any_eng.model.cfg.vocab_size)
+        rng = np.random.default_rng(seed)
+        if isinstance(bridge, ServingBridge):
+            br, own = bridge, False
+        else:
+            cfg = bridge if isinstance(bridge, BridgeConfig) \
+                else BridgeConfig(max_batch=batch_size)
+            br, own = ServingBridge(engines, cfg, spans=spans), True
+        # reused bridges accumulate across calls: slice this call's
+        # results/batches off the tail for per-call accounting, and
+        # offset rids so the bridge's terminal-once set (keyed by rid)
+        # never mistakes this call's requests for a prior call's
+        n0, b0 = len(br.results), len(br.batch_log)
+        rid0 = br.submitted
+        meta = {}
+        with _span(spans, "dispatch.batch_build"):
+            for i, (c, u) in enumerate(zip(*np.nonzero(active))):
+                rid = rid0 + i
+                a = int(dec_np[c, u])
+                tier, variant = _tier_variant(a, local)
+                if tier not in engines or variant not in engines[tier]:
+                    raise KeyError(
+                        f"no engine for tier {tier!r} variant {variant!r}; "
+                        "build_engines(...) must cover the routed decisions")
+                p = (np.asarray(prompts(int(c), int(u)), np.int32)
+                     if prompts is not None
+                     else rng.integers(0, vocab,
+                                       prompt_len).astype(np.int32))
+                meta[rid] = (int(c), int(u), a, tier, variant)
+                br.submit(Request(rid, p, max_new_tokens=max_new_tokens,
+                                  user=int(u), deadline_ms=deadline_ms),
+                          tier, variant)
+        t_build = time.perf_counter()
+        br.drain()
+        if own:
+            br.stop()
+        stats = br.stats()
+        served = []
+        slo_attained = slo_violated = 0
+        per_tv = {}
+        compute_s = 0.0
+        batch_log = br.batch_log[b0:]
+        for b in batch_log:
+            compute_s += b["serve_time"]
+            tv = per_tv.setdefault(b["key"], {"requests": 0, "batches": 0,
+                                              "compute_ms": 0.0,
+                                              "emulated_ms": 0.0,
+                                              "queue_ms": []})
+            tv["batches"] += 1
+            tv["compute_ms"] += b["serve_time"] * 1e3
+            tv["emulated_ms"] += b["response_time"] * 1e3
+        for r, tier, variant in br.results[n0:]:
+            c, u, a, _t0, _v0 = meta[r.rid]
+            key = f"{tier}/{variant}"
+            tv = per_tv.setdefault(key, {"requests": 0, "batches": 0,
+                                         "compute_ms": 0.0,
+                                         "emulated_ms": 0.0,
+                                         "queue_ms": []})
+            q_ms = float(r.queue_time * 1e3)
+            tv["requests"] += 1
+            tv["queue_ms"].append(q_ms)
+            served.append(ServedRequest(
+                c, u, a, tier, variant, float(pred[c, u]),
+                float(r.response_time * 1e3), queue_ms=q_ms,
+                deadline_ms=r.deadline_ms, deadline_met=r.deadline_met))
+            slo_attained += bool(r.deadline_met)
+            slo_violated += not r.deadline_met
+            if spans is not None:
+                spans.complete(
+                    "request.e2e", r.arrival_time,
+                    r.queue_time + r.response_time, rid=r.rid, tier=tier,
+                    variant=variant, deadline_met=bool(r.deadline_met))
+        if spans is not None and (slo_attained or slo_violated):
+            spans.counter(
+                "slo.attainment", attained=slo_attained,
+                violated=slo_violated,
+                attainment=slo_attained
+                / max(slo_attained + slo_violated, 1))
+        batches = len(batch_log)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        batching_ms = (t_build - t0) * 1e3
+        compute_ms = compute_s * 1e3
+        for tv in per_tv.values():
+            q = tv.pop("queue_ms")
+            tv["queue_ms_mean"] = float(np.mean(q)) if q else 0.0
+        # the three components still sum to wall_ms exactly, but
+        # compute_ms adds up engine walls that OVERLAPPED across the
+        # bridge's worker threads, so the residual can be negative —
+        # that is the overlap the async bridge won back
+        timings = {"wall_ms": wall_ms, "batching_ms": batching_ms,
+                   "compute_ms": compute_ms,
+                   "dispatch_ms": wall_ms - batching_ms - compute_ms,
+                   "per_tier_variant": per_tv}
+        served.sort(key=lambda s: (s.cell, s.user))
+        hi = 4.0 * deadline_ms if np.isfinite(deadline_ms) \
+            else 4.0 * dynamics.MAX_RESPONSE_MS
+        lat = MetricsAccumulator.create(
+            {"e2e_ms": MetricDef(lo=0.0, hi=max(hi, 1.0), bins=64)})
+        if served:
+            lat = lat.update({"e2e_ms": jnp.asarray(
+                [r.e2e_ms for r in served], jnp.float32)})
+        # enrich shed reports with the routed (cell, user) so summary()
+        # accounts for every submitted request
+        for sr in stats["shed_requests"]:
+            if sr["rid"] in meta:
+                c, u, a, _t, _v = meta[sr["rid"]]
+                sr["cell"], sr["user"], sr["action"] = c, u, a
+        stats["overlap_x"] = compute_ms / max(wall_ms - batching_ms, 1e-9)
+        return served, batches, timings, lat, stats
+
     # ------------------------------------------------------------------
     def route(self, scen: Optional[FleetScenario] = None,
               counts: Optional[jnp.ndarray] = None,
@@ -948,7 +1098,7 @@ class FleetOrchestrator:
               batch_size: int = 8, prompt_len: int = 12, seed: int = 0,
               spans=None, hot_edge_util: float = 1.0,
               as_result: bool = False,
-              deadline_ms: Optional[float] = None):
+              deadline_ms: Optional[float] = None, bridge=None):
         """Route the whole fleet in one greedy pass.
 
         Without ``dispatch`` this is the pre-redesign contract:
@@ -982,6 +1132,15 @@ class FleetOrchestrator:
         same bound the reward's constraint-violation penalty enforces,
         so serving SLO attainment and training QoS violations measure
         one target. ``RouteResult.slo()`` reports attainment.
+
+        ``bridge`` switches the dispatch to the async serving bridge
+        (``repro.serving.bridge``): ``True`` builds a per-call
+        ``ServingBridge`` with ``max_batch=batch_size``; a
+        ``BridgeConfig`` customizes admission/overflow/timeout
+        behavior; an existing ``ServingBridge`` reuses its (already
+        warmed, continuously running) queues. ``RouteResult.bridge``
+        then carries the shed/reroute accounting; the synchronous
+        one-shot drain (``bridge=None``) stays the default.
         """
         policy = self.policy
         if scen is None:
@@ -1015,16 +1174,24 @@ class FleetOrchestrator:
         if dispatch is not None:
             slo_ms = dynamics.MAX_RESPONSE_MS if deadline_ms is None \
                 else float(deadline_ms)
+            brinfo = None
             with _span(spans, "route.dispatch"):
-                served, batches, timings, lat = self._dispatch(
-                    dec, scen, dispatch, prompts, max_new_tokens,
-                    batch_size, prompt_len, seed, spans=spans,
-                    deadline_ms=slo_ms)
+                if bridge is not None and bridge is not False:
+                    served, batches, timings, lat, brinfo = \
+                        self._dispatch_bridge(
+                            dec, scen, dispatch, bridge, prompts,
+                            max_new_tokens, batch_size, prompt_len, seed,
+                            spans=spans, deadline_ms=slo_ms)
+                else:
+                    served, batches, timings, lat = self._dispatch(
+                        dec, scen, dispatch, prompts, max_new_tokens,
+                        batch_size, prompt_len, seed, spans=spans,
+                        deadline_ms=slo_ms)
             return RouteResult(decisions=dec, ids=ids, served=served,
                                batches=batches, edge_util=util,
                                timings=timings,
                                hot_edge_util=hot_edge_util,
-                               lat_acc=lat)
+                               lat_acc=lat, bridge=brinfo)
         if as_result:
             return RouteResult(decisions=dec, ids=ids, served=[],
                                batches=0, edge_util=util,

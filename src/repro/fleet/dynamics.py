@@ -28,7 +28,7 @@ d0 local 459 ms, cloud@1 ~364 ms, edge-only@5 ~1195 ms, all-d7 72 ms.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -104,7 +104,7 @@ def t_comp_device(model_id, xp=np):
 
 
 def response_times(per_user, end_b, edge_b, *, counts=None, active=None,
-                   cloud_mult=None, xp=np):
+                   cloud_mult=None, calib=None, xp=np):
     """Per-user response time (ms), noise-free.
 
     per_user : (..., N) int  per-user action ids (0..7 local, 8 edge, 9 cloud)
@@ -119,9 +119,16 @@ def response_times(per_user, end_b, edge_b, *, counts=None, active=None,
                (the edge->cloud hop and cloud compute, not the device
                upload), broadcastable against ``(..., N)`` — see
                ``fleet.topology.cloud_load_multiplier``
+    calib    : optional ``Calibration`` — routes through the calibrated
+               component path (``calibrated_response_times``); ``None``
+               keeps the uncalibrated code path bit-identical
 
     Broadcasts over leading batch dims; ``xp`` selects numpy vs jax.numpy.
     """
+    if calib is not None:
+        return calibrated_response_times(
+            per_user, end_b, edge_b, calib, counts=counts, active=active,
+            cloud_mult=cloud_mult, xp=xp)
     per_user = xp.asarray(per_user)
     end_b = xp.asarray(end_b)
     edge_b = xp.asarray(edge_b)
@@ -176,19 +183,133 @@ def accuracies(per_user, xp=np):
     return xp.asarray(TOP5)[xp.where(per_user < A_EDGE, per_user, 0)]
 
 
+# ---------------------------------------------------------------------------
+# sim-to-real calibration seam (repro.fleet.calibrate fits these)
+# ---------------------------------------------------------------------------
+
+#: Tier order used by Calibration arrays: index 0=S (end device), 1=E, 2=C.
+CALIB_TIERS = ("S", "E", "C")
+
+
+class Calibration(NamedTuple):
+    """Per-tier sim-to-real corrections to the latency model.
+
+    compute_scale : (3,) multiplier on the tier's *compute* component
+                    (S/E/C order) — fitted so model compute tracks the
+                    measured engine wall from ``gap_breakdown()``
+    hop_offset_ms : (3,) additive offset (ms) on the tier's
+                    *communication* component — absorbs per-hop constants
+                    the affine model misses (may be negative)
+
+    A NamedTuple of arrays is automatically a jax pytree, so a
+    Calibration rides inside ``FleetScenario`` through jit/scan/shard
+    unchanged. ``identity()`` is a no-op calibration (scale 1, offset 0).
+    """
+    compute_scale: np.ndarray
+    hop_offset_ms: np.ndarray
+
+    @staticmethod
+    def identity(xp=np):
+        return Calibration(xp.ones(3, xp.float64 if xp is np else None),
+                           xp.zeros(3, xp.float64 if xp is np else None))
+
+
+def user_tier(per_user, xp=np):
+    """(..., N) action ids -> (..., N) tier index into CALIB_TIERS."""
+    per_user = xp.asarray(per_user)
+    return xp.where(per_user == A_EDGE, 1,
+                    xp.where(per_user == A_CLOUD, 2, 0))
+
+
+def response_components(per_user, end_b, edge_b, *, counts=None, active=None,
+                        cloud_mult=None, xp=np):
+    """Split ``response_times`` into (communication, compute) components.
+
+    Same signature/broadcasting as ``response_times``; returns a
+    ``(comm_ms, comp_ms)`` pair with ``comm + comp ≈ response_times``
+    (allclose — the split re-associates the float sums). comm carries
+    orchestration + upload/hop link terms; comp carries the device/edge/
+    cloud model-execution terms (with processor-sharing, memory-penalty
+    and ``cloud_mult`` factors on the compute term). This is the
+    decomposition ``fleet.calibrate`` fits against the measured engine
+    wall isolated by ``RouteResult.gap_breakdown()``.
+    """
+    per_user = xp.asarray(per_user)
+    end_b = xp.asarray(end_b)
+    edge_b = xp.asarray(edge_b)
+    local = per_user < A_EDGE
+    at_edge = per_user == A_EDGE
+    at_cloud = per_user == A_CLOUD
+    if active is not None:
+        active = xp.asarray(active)
+        at_edge = at_edge & active
+        at_cloud = at_cloud & active
+        local = local & active
+    if counts is None:
+        n_e = at_edge.sum(-1)[..., None]
+        n_c = at_cloud.sum(-1)[..., None]
+    else:
+        n_e = xp.asarray(counts[0])[..., None]
+        n_c = xp.asarray(counts[1])[..., None]
+
+    comm = xp.asarray(T_ORCH_MS)[end_b]
+    comp = xp.where(local,
+                    t_comp_device(xp.where(local, per_user, 0), xp), 0.0)
+    up_e = xp.asarray(T_UP_EDGE_MS)[end_b]
+    comp_e = t_comp_device(0, xp) / TIER_SPEED["E"]
+    cpu_e = xp.maximum(1.0, n_e / TIER_CORES["E"])
+    link_e = xp.maximum(1.0, n_e / EDGE_LINK_CAP)
+    mem_e = xp.where(n_e > EDGE_MEM_BUSY_AT, MEM_BUSY_PENALTY, 1.0)
+    comm = comm + xp.where(at_edge, up_e * link_e, 0.0)
+    comp = comp + xp.where(at_edge, comp_e * cpu_e * mem_e, 0.0)
+    comp_c = t_comp_device(0, xp) / TIER_SPEED["C"]
+    cpu_c = xp.maximum(1.0, n_c / TIER_CORES["C"])
+    link_c = xp.maximum(1.0, n_c / CLOUD_LINK_CAP)
+    mem_c = xp.where(n_c > CLOUD_MEM_BUSY_AT, MEM_BUSY_PENALTY, 1.0)
+    hop_c = xp.asarray(T_HOP_CLOUD_MS)[edge_b][..., None] * link_c
+    comp_term = comp_c * cpu_c * mem_c
+    if cloud_mult is not None:
+        hop_c = hop_c * cloud_mult
+        comp_term = comp_term * cloud_mult
+    comm = comm + xp.where(at_cloud, up_e * link_c + hop_c, 0.0)
+    comp = comp + xp.where(at_cloud, comp_term, 0.0)
+    if active is not None:
+        comm = xp.where(active, comm, 0.0)
+        comp = xp.where(active, comp, 0.0)
+    return comm, comp
+
+
+def calibrated_response_times(per_user, end_b, edge_b, calib, *, counts=None,
+                              active=None, cloud_mult=None, xp=np):
+    """Calibrated per-user response (ms):
+    ``max(comm + hop_offset[tier] + compute_scale[tier] * comp, 0)``,
+    inactive users masked to 0 as in ``response_times``."""
+    comm, comp = response_components(per_user, end_b, edge_b, counts=counts,
+                                     active=active, cloud_mult=cloud_mult,
+                                     xp=xp)
+    tier = user_tier(per_user, xp=xp)
+    scale = xp.asarray(calib.compute_scale)[tier]
+    off = xp.asarray(calib.hop_offset_ms)[tier]
+    t = xp.maximum(comm + off + scale * comp, 0.0)
+    if active is not None:
+        t = xp.where(xp.asarray(active), t, 0.0)
+    return t
+
+
 def expected_response(per_user, end_b, edge_b, *, active=None, counts=None,
-                      cloud_mult=None, xp=np):
+                      cloud_mult=None, calib=None, xp=np):
     """(mean response ms, mean top-5 accuracy) over the (last) user axis.
 
     With an ``active`` mask, means are over active users only. A cell
     with zero active users served nothing: it reports 0 ms and a
     vacuously-satisfying 100% accuracy, so it can never earn the
     constraint-violation reward floor for being idle. ``counts`` /
-    ``cloud_mult`` pass through to ``response_times`` (the
-    ``fleet.topology`` shared-contention seam).
+    ``cloud_mult`` / ``calib`` pass through to ``response_times`` (the
+    ``fleet.topology`` shared-contention and sim-to-real calibration
+    seams).
     """
     t = response_times(per_user, end_b, edge_b, active=active, counts=counts,
-                       cloud_mult=cloud_mult, xp=xp)
+                       cloud_mult=cloud_mult, calib=calib, xp=xp)
     acc = accuracies(per_user, xp=xp)
     if active is None:
         return t.mean(-1), acc.mean(-1)
@@ -227,13 +348,17 @@ cell_response_times = jax.jit(jax.vmap(_cell_response))
 
 
 @jax.jit
-def fleet_expected_response(per_user, end_b, edge_b, active=None):
-    """(cells, N) batch -> ((cells,) mean ms, (cells,) mean accuracy)."""
-    return expected_response(per_user, end_b, edge_b, active=active, xp=jnp)
+def fleet_expected_response(per_user, end_b, edge_b, active=None, calib=None):
+    """(cells, N) batch -> ((cells,) mean ms, (cells,) mean accuracy).
+    ``calib=None`` keeps the uncalibrated path; a ``Calibration`` pytree
+    retraces once onto the calibrated component path."""
+    return expected_response(per_user, end_b, edge_b, active=active,
+                             calib=calib, xp=jnp)
 
 
 @jax.jit
-def fleet_actions_expected_response(per_user_k, end_b, edge_b, member=None):
+def fleet_actions_expected_response(per_user_k, end_b, edge_b, member=None,
+                                    calib=None):
     """Evaluate K candidate joint actions for every cell at once (the
     inner kernel of ``population.fleet_bruteforce``).
 
@@ -245,4 +370,5 @@ def fleet_actions_expected_response(per_user_k, end_b, edge_b, member=None):
     """
     active = None if member is None else member[:, None, :]
     return expected_response(per_user_k[None, :, :], end_b[:, None, :],
-                             edge_b[:, None], active=active, xp=jnp)
+                             edge_b[:, None], active=active, calib=calib,
+                             xp=jnp)

@@ -155,11 +155,12 @@ def simulate_responses(key, scen: FleetScenario, per_user, noise: float):
     assignment happens inside the dynamics each step)."""
     if scen.topo is None:
         mean_ms, acc = dynamics.expected_response(
-            per_user, scen.end_b, scen.edge_b, active=scen.active, xp=jnp)
+            per_user, scen.end_b, scen.edge_b, active=scen.active,
+            calib=scen.calib, xp=jnp)
     else:
         mean_ms, acc = topology.topology_expected_response(
             per_user, scen.end_b, scen.edge_b, scen.topo,
-            active=scen.active, xp=jnp)
+            active=scen.active, calib=scen.calib, xp=jnp)
     n_act = jnp.maximum(scen.active.sum(-1), 1)
     if noise:
         # one per-cell draw on the mean instead of the scalar env's N
@@ -184,9 +185,11 @@ def nominal_expected_response(scen: FleetScenario, per_user):
     benchmarks, so the two contention regimes can't drift apart."""
     if scen.topo is None:
         return dynamics.fleet_expected_response(
-            per_user, scen.end_b, scen.edge_b, scen.member)
+            per_user, scen.end_b, scen.edge_b, scen.member,
+            calib=scen.calib)
     return topology.fleet_topology_expected_response(
-        per_user, scen.end_b, scen.edge_b, scen.topo, scen.member)
+        per_user, scen.end_b, scen.edge_b, scen.topo, scen.member,
+        calib=scen.calib)
 
 
 def make_fleet_env_step(source, threshold: float = 0.0,
@@ -590,7 +593,8 @@ def _isolated_bruteforce(scen: FleetScenario, pu_table: jnp.ndarray,
     for lo in range(0, pu_table.shape[0], chunk):
         pu = pu_table[lo:lo + chunk]                           # (k, N)
         ms, acc = dynamics.fleet_actions_expected_response(
-            pu, scen.end_b, scen.edge_b, member)               # (cells, k)
+            pu, scen.end_b, scen.edge_b, member,
+            calib=scen.calib)                                  # (cells, k)
         ms = jnp.where(dynamics.feasible(acc, threshold, xp=jnp), ms,
                        jnp.inf)
         i = ms.argmin(-1)
@@ -612,7 +616,7 @@ BEST_RESPONSE_TOL = 1e-6
 @jax.jit
 def _best_response_round(idx, pu_table, end_b, edge_b, member, feas,
                          cand_e, cand_c, cell_edge, edge_capacity,
-                         cloud_servers):
+                         cloud_servers, calib=None):
     """One Gauss-Seidel sweep: each cell in turn picks its best feasible
     candidate given every OTHER cell's current decision, with running
     per-edge / cloud totals updated in place (O(1) per cell instead of a
@@ -638,7 +642,7 @@ def _best_response_round(idx, pu_table, end_b, edge_b, member, feas,
         ms_k, _ = dynamics.expected_response(
             pu_table, end_b[i][None, :], edge_b[i],
             active=member[i][None, :], counts=(n_e_k, cand_c[i]),
-            cloud_mult=mult_k[:, None], xp=jnp)              # (K,)
+            cloud_mult=mult_k[:, None], calib=calib, xp=jnp)  # (K,)
         score = jnp.where(feas[i], ms_k, jnp.inf)
         j = score.argmin()
         cur = idx[i]
@@ -714,13 +718,14 @@ def topology_bruteforce(scen: FleetScenario, pu_table: jnp.ndarray,
         new_idx = _best_response_round(
             idx, pu_table, scen.end_b, scen.edge_b, scen.member, feas,
             cand_e, cand_c, topo.cell_edge, topo.edge_capacity,
-            topo.cloud_servers)
+            topo.cloud_servers, calib=scen.calib)
         if bool((new_idx == idx).all()):
             converged = True
             break
         idx = new_idx
     ms, _ = topology.fleet_topology_expected_response(
-        pu_table[idx], scen.end_b, scen.edge_b, topo, scen.member)
+        pu_table[idx], scen.end_b, scen.edge_b, topo, scen.member,
+        calib=scen.calib)
     return ms, idx, converged, rounds
 
 

@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fleet.dynamics import EXPERIMENTS
+from repro.fleet.dynamics import EXPERIMENTS, Calibration
 from repro.fleet.topology import (Topology, hot_edge_topology,
                                   random_topology, skewed_topology,
                                   step_edge_failures)
@@ -183,6 +183,9 @@ class FleetScenario:
     t      : ()             int32   step counter (drives diurnal curve)
     topo   : Topology | None        shared edge/cloud infrastructure;
                                     None = isolated cells (the paper)
+    calib  : Calibration | None     sim-to-real latency-model corrections
+                                    (``repro.fleet.calibrate``); None =
+                                    the uncalibrated paper model
     """
     end_b: jnp.ndarray
     edge_b: jnp.ndarray
@@ -190,10 +193,11 @@ class FleetScenario:
     active: jnp.ndarray
     t: jnp.ndarray
     topo: Optional[Topology] = None
+    calib: Optional[Calibration] = None
 
     def tree_flatten(self):
         return ((self.end_b, self.edge_b, self.member, self.active, self.t,
-                 self.topo), None)
+                 self.topo, self.calib), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -303,7 +307,7 @@ def step_fleet(key, s: FleetScenario, cfg: FleetConfig) -> FleetScenario:
         member = step_churn(k_churn, member, cfg.p_join, cfg.p_leave)
     t = s.t + 1
     active = member & _arrivals(k_arr, cfg, member.shape, t)
-    return FleetScenario(end_b, edge_b, member, active, t, topo)
+    return FleetScenario(end_b, edge_b, member, active, t, topo, s.calib)
 
 
 def table5_fleet(name: str, cells: int, users: int = 5) -> FleetScenario:

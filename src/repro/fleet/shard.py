@@ -143,20 +143,33 @@ def shard_topology(topo: Optional[Topology],
     return _map_topology(topo, mesh, shard_array)
 
 
+def _constrain_replicated(tree, mesh: Optional[Mesh]):
+    """Jit-safe twin of ``replicate``: constrain every leaf to the
+    fully-replicated layout (identity when ``mesh`` is None)."""
+    if mesh is None:
+        return tree
+    s = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.with_sharding_constraint(x, s), tree)
+
+
 def _map_scenario(s: FleetScenario, mesh: Optional[Mesh], place,
-                  place_topo) -> FleetScenario:
+                  place_topo, place_rep) -> FleetScenario:
     if mesh is None:
         return s
+    # calib is tier-indexed (3,) metadata, not per-cell: replicate it
     return FleetScenario(
         place(s.end_b, mesh), place(s.edge_b, mesh), place(s.member, mesh),
-        place(s.active, mesh), s.t, place_topo(s.topo, mesh))
+        place(s.active, mesh), s.t, place_topo(s.topo, mesh),
+        None if s.calib is None else place_rep(s.calib, mesh))
 
 
 def shard_scenario(s: FleetScenario,
                    mesh: Optional[Mesh]) -> FleetScenario:
     """Place a ``FleetScenario`` with every per-cell leaf split along
-    the fleet axis (``t`` and topology metadata replicated)."""
-    return _map_scenario(s, mesh, shard_array, shard_topology)
+    the fleet axis (``t``, topology metadata, and any calibration
+    replicated)."""
+    return _map_scenario(s, mesh, shard_array, shard_topology, replicate)
 
 
 def constrain_scenario(s: FleetScenario,
@@ -165,7 +178,8 @@ def constrain_scenario(s: FleetScenario,
     sources' ``step`` applies so the layout survives ``lax.scan``."""
     return _map_scenario(
         s, mesh, constrain_array,
-        lambda t, m: _map_topology(t, m, constrain_array))
+        lambda t, m: _map_topology(t, m, constrain_array),
+        _constrain_replicated)
 
 
 def shard_replay(buf, mesh: Optional[Mesh]):

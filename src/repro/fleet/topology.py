@@ -269,33 +269,34 @@ def shared_contention(per_user, topo: Topology, active=None, xp=jnp):
 
 
 def topology_response_times(per_user, end_b, edge_b, topo: Topology,
-                            active=None, xp=jnp):
+                            active=None, calib=None, xp=jnp):
     """Per-user response times (ms) under shared edge/cloud contention —
     the topology-aware analogue of ``dynamics.response_times`` for a
     ``(cells, N)`` fleet decision."""
     n_e, n_c, mult = shared_contention(per_user, topo, active=active, xp=xp)
     return dynamics.response_times(per_user, end_b, edge_b,
                                    counts=(n_e, n_c), active=active,
-                                   cloud_mult=mult, xp=xp)
+                                   cloud_mult=mult, calib=calib, xp=xp)
 
 
 def topology_expected_response(per_user, end_b, edge_b, topo: Topology,
-                               active=None, xp=jnp):
+                               active=None, calib=None, xp=jnp):
     """((cells,) mean ms, (cells,) mean accuracy) under shared
     contention — the topology-aware ``dynamics.expected_response``."""
     n_e, n_c, mult = shared_contention(per_user, topo, active=active, xp=xp)
     return dynamics.expected_response(per_user, end_b, edge_b,
                                       active=active, counts=(n_e, n_c),
-                                      cloud_mult=mult, xp=xp)
+                                      cloud_mult=mult, calib=calib, xp=xp)
 
 
 @jax.jit
 def fleet_topology_expected_response(per_user, end_b, edge_b,
-                                     topo: Topology, active=None):
+                                     topo: Topology, active=None,
+                                     calib=None):
     """Jitted fleet entry point: one call evaluates every cell of the
     fleet under shared edge/cloud contention."""
     return topology_expected_response(per_user, end_b, edge_b, topo,
-                                      active=active, xp=jnp)
+                                      active=active, calib=calib, xp=jnp)
 
 
 def edge_utilization(per_user, topo: Topology, active=None, xp=jnp):

@@ -20,11 +20,16 @@ from repro.models.variants import build_ladder
 from repro.serving import Request, RequestBatcher, ServingEngine
 
 
-def build_engines(cfg, variants=("d0", "d4", "d7"), max_len=64):
-    """One engine per (tier, variant); tiers emulated by compute_scale."""
+def build_engines(cfg, variants=("d0", "d4", "d7"), max_len=64, hop_ms=None):
+    """One engine per (tier, variant); tiers emulated by compute_scale.
+
+    ``hop_ms`` (e.g. ``{"E": 25.0, "C": 50.0}``) adds a real per-batch
+    network-hop sleep per tier — tier SEPARATION emulation on a single
+    host (see ``ServingEngine``); default: no hops (local tiers)."""
     ladder = build_ladder(cfg)
     engines = {"S": {}, "E": {}, "C": {}}
     scales = {"S": 1.0, "E": 2.0, "C": 4.0}
+    hops = dict(hop_ms or {})
     for vid in variants:
         vcfg = ladder[vid].cfg
         model = build_model(vcfg)
@@ -33,7 +38,8 @@ def build_engines(cfg, variants=("d0", "d4", "d7"), max_len=64):
             if tier != "S" and vid != "d0":
                 continue  # paper: edge/cloud always run d0
             engines[tier][vid] = ServingEngine(model, params, max_len=max_len,
-                                               compute_scale=sc)
+                                               compute_scale=sc,
+                                               hop_ms=hops.get(tier, 0.0))
     return engines
 
 

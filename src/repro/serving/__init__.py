@@ -1,2 +1,3 @@
 from repro.serving.engine import ServingEngine
 from repro.serving.batching import Request, RequestBatcher
+from repro.serving.bridge import BridgeConfig, ServingBridge

@@ -50,13 +50,7 @@ class RequestBatcher:
                 return b
         return self.buckets[-1]
 
-    def next_batch(self):
-        """Pop up to batch_size requests; returns (requests, tokens, lengths)
-        with tokens right-padded to a shared bucket length."""
-        if not self.queue:
-            return None
-        reqs = self.queue[: self.batch_size]
-        self.queue = self.queue[self.batch_size:]
+    def _pad(self, reqs: List[Request]):
         max_len = self._bucket(max(len(r.prompt) for r in reqs))
         toks = np.zeros((len(reqs), max_len), np.int32)
         lens = np.zeros((len(reqs),), np.int32)
@@ -65,3 +59,23 @@ class RequestBatcher:
             toks[i, :len(p)] = p
             lens[i] = len(p)
         return reqs, toks, lens
+
+    def next_batch(self):
+        """Pop up to batch_size requests; returns (requests, tokens, lengths)
+        with tokens right-padded to a shared bucket length. Draining an
+        empty queue returns an empty batch ([], (0, bucket) tokens,
+        (0,) lengths) — not None, not an error — so async drain loops can
+        poll without a sentinel check."""
+        if not self.queue:
+            return ([], np.zeros((0, self.buckets[0]), np.int32),
+                    np.zeros((0,), np.int32))
+        reqs = self.queue[: self.batch_size]
+        self.queue = self.queue[self.batch_size:]
+        return self._pad(reqs)
+
+    def pack(self, reqs: List[Request]):
+        """Pad an explicit request list into fixed-shape batches. A list
+        larger than batch_size splits into multiple batches instead of
+        silently truncating — the async bridge's batch-formation path."""
+        return [self._pad(reqs[lo:lo + self.batch_size])
+                for lo in range(0, len(reqs), self.batch_size)]

@@ -21,13 +21,23 @@ from repro.serving.batching import Request, RequestBatcher
 
 class ServingEngine:
     def __init__(self, model, params, *, max_len: int = 512,
-                 compute_scale: float = 1.0):
+                 compute_scale: float = 1.0, hop_ms: float = 0.0):
         """compute_scale < 1 emulates a slower tier in the end-edge-cloud
-        example (wall-time multiplied post-hoc); 1.0 = measure raw."""
+        example (wall-time multiplied post-hoc); 1.0 = measure raw.
+
+        hop_ms > 0 emulates the NETWORK HOP to a physically separate
+        tier as a real per-batch sleep before compute. Unlike the
+        post-hoc compute_scale it actually elapses (GIL released), so
+        concurrent engines genuinely overlap it — the property of
+        separate testbed machines that a single shared host loses, and
+        the one the async bridge exists to exploit. The hop counts in
+        both the raw batch wall and the stamped ``response_time`` (an
+        orchestrator measuring a remote tier sees comm + compute)."""
         self.model = model
         self.params = params
         self.max_len = max_len
         self.compute_scale = compute_scale
+        self.hop_ms = hop_ms
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len=max_len))
         self._decode = jax.jit(model.decode)
@@ -70,18 +80,21 @@ class ServingEngine:
             wall = (time.perf_counter() - t0) / self.compute_scale
         return np.asarray(out), wall
 
-    def serve(self, batcher: RequestBatcher, spans=None):
-        """Drain one batch from the batcher; fills response_time/output
-        plus the queue/serve stamps the obs layer reads, and scores the
-        SLO deadline stamped at submit (``deadline_met``: end-to-end
-        queue + emulated compute against ``deadline_ms``)."""
-        t_drain = time.perf_counter()
-        nxt = batcher.next_batch()
-        if nxt is None:
+    def serve_batch(self, reqs, toks, spans=None, t_drain=None):
+        """Serve one already-formed batch (requests + padded tokens);
+        fills response_time/output plus the queue/serve stamps the obs
+        layer reads, and scores the SLO deadline stamped at submit
+        (``deadline_met``: end-to-end queue + emulated compute against
+        ``deadline_ms``). ``t_drain`` is the batch-formation stamp; it
+        defaults to now, and queue_time is measured against it."""
+        if not reqs:
             return []
-        reqs, toks, _lens = nxt
+        t_drain = time.perf_counter() if t_drain is None else t_drain
+        if self.hop_ms:
+            time.sleep(self.hop_ms / 1e3)   # the tier's network hop
         out, wall = self.generate(toks, max_new_tokens=reqs[0].max_new_tokens,
                                   spans=spans)
+        wall += self.hop_ms / 1e3           # comm is not tier-speed-scaled
         raw = time.perf_counter() - t_drain
         for i, r in enumerate(reqs):
             r.output = out[i]
@@ -91,3 +104,12 @@ class ServingEngine:
             r.deadline_met = \
                 (r.queue_time + r.response_time) * 1e3 <= r.deadline_ms
         return reqs
+
+    def serve(self, batcher: RequestBatcher, spans=None):
+        """Drain one batch from the batcher (empty drain returns [])."""
+        t_drain = time.perf_counter()
+        nxt = batcher.next_batch()
+        if nxt is None or not nxt[0]:
+            return []
+        reqs, toks, _lens = nxt
+        return self.serve_batch(reqs, toks, spans=spans, t_drain=t_drain)

@@ -1,0 +1,181 @@
+"""Sim-to-real calibration loop (ISSUE-9): the response-components
+split, the Calibration pytree seam through dynamics/scenarios/shard,
+the least-squares fit closing a synthetic gap, and CalibratedDynamics
+slotting into the training loops."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fleet import (CalibratedDynamics, Calibration, FleetConfig,
+                         FleetDQN, FleetOrchestrator, FleetQConfig,
+                         FleetQLearning, SyntheticSource, apply_calibration,
+                         calibrated_response_times, dynamics,
+                         fit_calibration, init_fleet, mixed_table5_fleet,
+                         nominal_expected_response, response_times,
+                         user_tier)
+from repro.fleet.api import RouteResult, ServedRequest
+from repro.fleet.calibrate import _model_components, calibration_report
+
+
+def _rand_actions(key, cells, users):
+    return jax.random.randint(key, (cells, users), 0, 10)
+
+
+def _scen(cells=6, users=3, seed=0):
+    return init_fleet(jax.random.PRNGKey(seed),
+                      FleetConfig(cells=cells, users=users,
+                                  arrival_rate=None))
+
+
+# ------------------------------------------------ components identity ----
+def test_response_components_sum_to_response_times():
+    scen = _scen()
+    pu = _rand_actions(jax.random.PRNGKey(1), scen.cells, 3)
+    comm, comp = dynamics.response_components(
+        pu, scen.end_b, scen.edge_b, active=scen.active, xp=jnp)
+    want = response_times(pu, scen.end_b, scen.edge_b,
+                          active=scen.active, xp=jnp)
+    np.testing.assert_allclose(np.asarray(comm + comp), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_identity_calibration_matches_base_model():
+    scen = _scen(seed=2)
+    pu = _rand_actions(jax.random.PRNGKey(3), scen.cells, 3)
+    base = response_times(pu, scen.end_b, scen.edge_b,
+                          active=scen.active, xp=jnp)
+    ident = calibrated_response_times(pu, scen.end_b, scen.edge_b,
+                                      Calibration.identity(jnp),
+                                      active=scen.active, xp=jnp)
+    np.testing.assert_allclose(np.asarray(ident), np.asarray(base),
+                               rtol=1e-6)
+    # response_times(calib=None) is the untouched base path, bit-exact
+    np.testing.assert_array_equal(
+        np.asarray(response_times(pu, scen.end_b, scen.edge_b,
+                                  active=scen.active, calib=None, xp=jnp)),
+        np.asarray(base))
+
+
+def test_user_tier_maps_offload_actions():
+    pu = jnp.asarray([[0, dynamics.A_EDGE, dynamics.A_CLOUD, 5]])
+    np.testing.assert_array_equal(np.asarray(user_tier(pu, jnp)),
+                                  [[0, 1, 2, 0]])
+
+
+# --------------------------------------------------- calibration seam ----
+def test_scenario_pytree_carries_calibration():
+    scen = _scen()
+    calib = Calibration(jnp.asarray([1.5, 2.0, 0.5]),
+                        jnp.asarray([3.0, -1.0, 0.0]))
+    stamped = apply_calibration(scen, calib)
+    leaves, treedef = jax.tree_util.tree_flatten(stamped)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.calib is not None
+    np.testing.assert_array_equal(np.asarray(back.calib.compute_scale),
+                                  np.asarray(calib.compute_scale))
+    # detaching restores the base model
+    assert apply_calibration(stamped, None).calib is None
+    # the stamp survives a fleet step
+    from repro.fleet import step_fleet
+    stepped = step_fleet(jax.random.PRNGKey(0), stamped,
+                         FleetConfig(cells=scen.cells, users=3,
+                                     arrival_rate=None))
+    assert stepped.calib is not None
+
+
+def test_calibration_changes_nominal_and_jitted_paths():
+    scen = _scen(seed=4)
+    pu = _rand_actions(jax.random.PRNGKey(5), scen.cells, 3)
+    calib = Calibration(jnp.asarray([2.0, 2.0, 2.0]),
+                        jnp.asarray([10.0, 10.0, 10.0]))
+    base_ms, _ = nominal_expected_response(scen, pu)
+    cal_ms, _ = nominal_expected_response(apply_calibration(scen, calib), pu)
+    # scale 2 + positive offsets: every cell's expected ms strictly grows
+    assert (np.asarray(cal_ms) > np.asarray(base_ms)).all()
+
+
+# ----------------------------------------------------------- the fit ----
+def _synthetic_result(scen, pu, scale=1.3, offset=20.0):
+    """A fake RouteResult whose measurements are an exact affine map of
+    the model's compute component: measured = scale*comp + offset + comm
+    (so a perfect fit recovers (scale, offset) and gap_x -> 1)."""
+    comm, comp = _model_components(np.asarray(pu), scen)
+    act = np.asarray(scen.active)
+    served = []
+    for c in range(scen.cells):
+        for u in range(pu.shape[1]):
+            if not act[c, u]:
+                continue
+            a = int(np.asarray(pu)[c, u])
+            tier = ("E" if a == dynamics.A_EDGE else
+                    "C" if a == dynamics.A_CLOUD else "S")
+            pred = comm[c, u] + comp[c, u]
+            meas = comm[c, u] + scale * comp[c, u] + offset
+            served.append(ServedRequest(cell=c, user=u, action=a, tier=tier,
+                                        variant="d0", predicted_ms=pred,
+                                        measured_ms=meas))
+    return RouteResult(decisions=pu, ids=jnp.zeros((scen.cells,), jnp.int32),
+                       served=served, batches=1)
+
+
+def test_fit_recovers_affine_gap_and_closes_it():
+    scen = _scen(cells=8, seed=6)
+    pu = _rand_actions(jax.random.PRNGKey(7), scen.cells, 3)
+    res = _synthetic_result(scen, pu, scale=1.3, offset=20.0)
+    fit = fit_calibration(res, scen)
+    coeff = fit.coefficients()
+    for tier in ("S", "E", "C"):
+        if coeff[tier].get("requests", 0) < 2:
+            continue
+        assert coeff[tier]["resid_rms_ms"] == pytest.approx(0.0, abs=1e-3)
+    # local tier has spread in comp -> exact recovery of (scale, offset)
+    assert coeff["S"]["compute_scale"] == pytest.approx(1.3, abs=1e-3)
+    assert coeff["S"]["hop_offset_ms"] == pytest.approx(20.0, abs=1e-2)
+    # the calibrated model reproduces the measurements: gap_x -> 1
+    pred = calibrated_response_times(pu, scen.end_b, scen.edge_b, fit.calib,
+                                     active=scen.active, xp=jnp)
+    pred = np.asarray(pred)
+    for r in res.served:
+        assert pred[r.cell, r.user] == pytest.approx(r.measured_ms,
+                                                     rel=1e-3)
+    report = calibration_report(fit, res, res)
+    assert set(report) == {"coefficients", "before", "after"}
+    assert report["after"]["requests"] == len(res.served)
+
+
+def test_fit_ignores_empty_tiers():
+    scen = _scen(cells=4, seed=8)
+    pu = jnp.zeros((scen.cells, 3), jnp.int32)      # everything local
+    fit = fit_calibration(_synthetic_result(scen, pu), scen)
+    coeff = fit.coefficients()
+    for tier in ("E", "C"):
+        assert coeff[tier]["requests"] == 0
+        assert coeff[tier]["compute_scale"] == 1.0       # identity kept
+        assert coeff[tier]["hop_offset_ms"] == 0.0
+
+
+# ------------------------------------------------- CalibratedDynamics ----
+def test_calibrated_dynamics_trains_policies():
+    cfg = FleetConfig(cells=8, users=3, arrival_rate=None)
+    calib = Calibration(jnp.asarray([1.2, 1.1, 0.9]),
+                        jnp.asarray([5.0, 2.0, -1.0]))
+    src = CalibratedDynamics(SyntheticSource(cfg), calib)
+    assert src.cells == 8 and src.users == 3
+    scen, state = src.reset(jax.random.PRNGKey(0))
+    assert scen.calib is not None and state.calib is not None
+    scen2, _ = src.step(jax.random.PRNGKey(1), state)
+    assert scen2.calib is not None
+    # both agents train a few jitted steps on the calibrated pytree
+    FleetQLearning(src, cfg=FleetQConfig(), seed=0).run(8)
+    FleetDQN(src, seed=0).run(8)
+
+
+def test_calibrated_dynamics_requires_scenario_state():
+    class _Bad:
+        state_is_scenario = False
+        cells, users, dynamic = 4, 3, False
+    with pytest.raises(TypeError):
+        CalibratedDynamics(_Bad(), Calibration.identity(jnp))

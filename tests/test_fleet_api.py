@@ -332,3 +332,51 @@ def test_trace_train_route_dispatch_end_to_end():
     s = res.summary()
     assert s["requests"] == n_active and np.isfinite(s["gap_x"])
     assert s["measured_mean_ms"] > 0 and s["predicted_mean_ms"] > 0
+
+
+# ------------------------------------------- ISSUE-9 acceptance: bridge --
+def test_route_bridge_end_to_end_real_engines():
+    """Acceptance: route(bridge=True) dispatches the same fleet through
+    the async bridge against REAL engines — conservation identities
+    hold (submitted == admitted + shed; served + shed == submitted;
+    attained + violated == dispatched; per-request queueing + compute
+    == e2e) and the bridge outcome surfaces in summary()."""
+    from repro.configs import get_config
+    from repro.launch.serve import build_engines
+    from repro.obs.spans import SpanRecorder, validate_chrome_trace
+    src = TraceSource.load(FIXTURE)
+    agent = FleetQLearning(src, cfg=FleetQConfig(eps_decay=5e-3), seed=0)
+    agent.run(2 * src.horizon)
+    engines = build_engines(get_config("edge-ladder"), variants=("d0",),
+                            max_len=48)
+    orch = FleetOrchestrator(agent)
+    kw = dict(dispatch=engines, max_new_tokens=2, batch_size=4,
+              prompt_len=8)
+    sync = orch.route(**kw)                       # warm + sync reference
+    spans = SpanRecorder()
+    res = orch.route(bridge=True, spans=spans, **kw)
+    n_active = int(np.asarray(agent.scen.active).sum())
+    assert len(res.served) == n_active
+    # same request set as the sync drain, bridge path attributed
+    assert ({(r.cell, r.user) for r in res.served}
+            == {(r.cell, r.user) for r in sync.served})
+    st = res.bridge
+    assert st is not None and res.summary()["bridge"] is st
+    assert st["submitted"] == n_active
+    assert st["submitted"] == st["admitted"] + st["shed"]["overflow"] \
+        + st["shed"]["deadline"]
+    assert st["served"] + st["shed"]["total"] == st["submitted"]
+    # per-request conservation + timing-wall identity
+    for r in res.served:
+        assert r.queue_ms + r.measured_ms == pytest.approx(r.e2e_ms)
+    t = res.timings
+    assert t["batching_ms"] + t["compute_ms"] + t["dispatch_ms"] \
+        == pytest.approx(t["wall_ms"])
+    slo = res.slo()
+    assert slo["measured"]["attained"] + slo["measured"]["violated"] \
+        == slo["requests"] == n_active
+    # bridge spans land in a valid Chrome trace
+    names = {e["name"] for e in spans.events}
+    assert any(n.startswith("bridge.batch.") for n in names)
+    assert "request.e2e" in names
+    validate_chrome_trace(spans.chrome_trace())

@@ -39,6 +39,10 @@ from repro.obs.report import flatten, is_number, rel_diff  # noqa: E402
 #:   lower   — overhead/gap-like, regression when new > old * (1 + tol)
 #:   floor   — quality, regression when new < tol (absolute; baseline
 #:             value is informational only)
+#:   ceiling — quality, regression when new > tol (absolute; the dual
+#:             of floor — e.g. the calibrated model error must stay
+#:             within 1.5x of the measured engines regardless of what
+#:             the baseline recorded)
 RULES = {
     "env_steps_per_s":            ("higher", 0.40),
     "rl_steps_per_s":             ("higher", 0.40),
@@ -57,6 +61,15 @@ RULES = {
     "slo_attainment_predicted":   ("floor", 0.50),
     "p99_ms":                     ("lower", 0.60),
     "windowed_overhead_x":        ("lower", 0.10),
+    # ISSUE 9 — async serving bridge + sim-to-real calibration. The
+    # bridge throughput gets the wide CI band of the other wall-clock
+    # metrics; the calibration quality gates are absolute: the fitted
+    # model must land within 1.5x of the measured engines (ceiling)
+    # and the policy retrained on calibrated dynamics must still match
+    # the oracle on a calibrated holdout (floor).
+    "bridge_throughput_rps":      ("higher", 0.50),
+    "calibrated_gap_x":           ("ceiling", 1.5),
+    "calibrated_dqn_holdout_reward_ratio": ("floor", 0.95),
 }
 
 #: manifest fields that must match for numbers to be comparable
@@ -107,6 +120,9 @@ def gate(base: dict, new: dict, scale: float) -> int:
         if direction == "floor":
             ok = vn >= tol
             detail = f"{vn:.6g} vs floor {tol:.6g}"
+        elif direction == "ceiling":
+            ok = vn <= tol
+            detail = f"{vn:.6g} vs ceiling {tol:.6g}"
         elif not is_number(vb):
             print(f"  {key:<{width}}  SKIP (baseline has no value: {vb!r})")
             continue
@@ -157,7 +173,7 @@ def main() -> None:
                     help="diff across backend/device-count mismatches")
     ap.add_argument("--tolerance-scale", type=float, default=1.0,
                     help="multiply every relative tolerance band "
-                         "(floors unaffected)")
+                         "(floors/ceilings unaffected)")
     args = ap.parse_args()
 
     if args.structural:

@@ -198,8 +198,43 @@ def timeline_view(path: str) -> int:
                     else ""
                 print(f"    (hist bound: one bin_width = "
                       f"{fmt(hist.get('bin_width'))} ms{tag})")
+    for p, node in _walk_dicts(payload):
+        if not ("coefficients" in node and "before" in node
+                and "after" in node):
+            continue
+        rendered += 1
+        name = ".".join(p) or "(root)"
+        before, after = node["before"], node["after"]
+        print(f"\n  calibration  {name}  "
+              f"[{after.get('requests')} request(s)]")
+        coeff = node["coefficients"]
+        width = max(len(t) for t in coeff)
+        print(f"    {'tier':<{width}}  {'compute_scale':>13}  "
+              f"{'hop_offset_ms':>13}  {'requests':>8}  "
+              f"{'resid_rms_ms':>12}")
+        for tier, c in coeff.items():
+            print(f"    {tier:<{width}}  {fmt(c['compute_scale']):>13}  "
+                  f"{fmt(c['hop_offset_ms']):>13}  "
+                  f"{c.get('requests', 0):>8}  "
+                  f"{_opt(c.get('resid_rms_ms')):>12}")
+        print(f"    {'':<8}  {'gap_x':>10}  {'measured_ms':>12}  "
+              f"{'predicted_ms':>13}  {'attainment':>10}")
+        for label, blk in (("before", before), ("after", after)):
+            att = blk.get("attainment_measured")
+            att_s = f"{att:.1%}" if att is not None else "·"
+            print(f"    {label:<8}  {_opt(blk.get('gap_x')):>10}  "
+                  f"{_opt(blk.get('measured_mean_ms')):>12}  "
+                  f"{_opt(blk.get('predicted_mean_ms')):>13}  "
+                  f"{att_s:>10}")
+        rt = node.get("retrained")
+        if rt:
+            print(f"    retrained policy: holdout_reward_ratio "
+                  f"{fmt(rt.get('holdout_reward_ratio'))} "
+                  f"({rt.get('train_steps')} steps, "
+                  f"{rt.get('cells')} cells)")
     if not rendered:
-        print("\n  (no windowed metrics or SLO blocks in this run)")
+        print("\n  (no windowed metrics, SLO, or calibration blocks in "
+              "this run)")
     return rendered
 
 
