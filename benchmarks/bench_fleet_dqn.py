@@ -124,6 +124,22 @@ def main(tiny: bool = False):
     emit("fleet_dqn_vs_tabular", dqn_sps / tab_sps,
          f"DQN/tabular RL-loop throughput at {cells} cells "
          f"(tabular {tab_sps:.0f} steps/s)")
+    # fused head vs legacy at the constrained operating point — the
+    # constraint head (top-k + combo filter) is where the fused op wins
+    fused_sps = bench_rl(
+        FleetDQN, cells, steps, chunk, seed=0,
+        cfg=FleetDQNConfig(accuracy_threshold=THRESHOLD))
+    unfused_sps = bench_rl(
+        FleetDQN, cells, steps, chunk, seed=0, impl="xla",
+        cfg=FleetDQNConfig(accuracy_threshold=THRESHOLD))
+    fused_x = fused_sps / unfused_sps
+    emit("fleet_dqn_rl_steps_fused", 1e6 / fused_sps,
+         f"steps_per_s={fused_sps:.0f} fused head, threshold={THRESHOLD}")
+    emit("fleet_dqn_rl_steps_unfused", 1e6 / unfused_sps,
+         f"steps_per_s={unfused_sps:.0f} legacy impl='xla', "
+         f"threshold={THRESHOLD}")
+    emit("fleet_dqn_fused_speedup", fused_x,
+         "x fused constraint head vs unfused (ISSUE-10: measurably >1)")
     per_step, flatness = bench_step_scaling(sizes, steps, chunk)
     obs_overhead = bench_obs_overhead(cells, steps, chunk)
     ratio, train_sps = bench_holdout(tr_cells, tr_steps, hold)
@@ -133,6 +149,9 @@ def main(tiny: bool = False):
         "cells": cells, "users": USERS,
         "dqn_rl_steps_per_s": dqn_sps,
         "tabular_rl_steps_per_s": tab_sps,
+        "rl_fused_dqn_steps_per_s": fused_sps,
+        "rl_unfused_dqn_steps_per_s": unfused_sps,
+        "rl_fused_dqn_speedup_x": fused_x,
         "us_per_fleet_step": {str(k): v for k, v in per_step.items()},
         "step_flatness": flatness,
         "obs_overhead_x": obs_overhead,

@@ -33,7 +33,7 @@ def profile_kernel(fn, *args, name=None, **kw):
     return prof.as_dict()
 
 
-def main():
+def main(tiny: bool = False):
     out = {}
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 5)
@@ -91,9 +91,66 @@ def main():
     emit("kernel_selective_scan_256", us_k, f"ref{us_r:.0f}us")
     out["scan"] = {"us_pallas_interpret": us_k, "us_ref": us_r}
 
+    # fused tabular RL act+update (ISSUE-10): interpret-mode kernel vs
+    # the fused-jnp formulation that runs in production on CPU, with the
+    # compiler's roofline position of the latter
+    tc, ts, tk = (16, 9, 27) if tiny else (64, 36, 100)
+    tq = jax.random.normal(ks[0], (tc, ts, tk), jnp.float32)
+    s = jax.random.randint(ks[1], (tc,), 0, ts).astype(jnp.int32)
+    a = jax.random.randint(ks[2], (tc,), 0, tk).astype(jnp.int32)
+    s2 = jax.random.randint(ks[3], (tc,), 0, ts).astype(jnp.int32)
+    r = -jax.random.uniform(ks[4], (tc,), jnp.float32)
+    tab_kw = dict(alpha=0.9, gamma=0.1)
+    us_k = _time(ops.fused_tabular_update, tq, s, a, r, s2,
+                 impl="pallas", bc=8, **tab_kw)
+    us_r = _time(ops.fused_tabular_update, tq, s, a, r, s2, impl="ref",
+                 **tab_kw)
+    prof = profile_kernel(ops.fused_tabular_update, tq, s, a, r, s2,
+                          impl="ref", name=f"tabular_rl_{tc}_ref",
+                          **tab_kw)
+    emit(f"kernel_tabular_rl_{tc}", us_k,
+         f"ref{us_r:.0f}us intensity{prof['arithmetic_intensity']:.2f}_"
+         f"{prof['dominant']}")
+    out["tabular_rl"] = {"us_pallas_interpret": us_k, "us_ref": us_r,
+                         "profile": prof}
+
+    # fused DQN featurize + constraint head (ISSUE-10)
+    from repro.fleet import dynamics
+    dc, dn, dh = (16, 2, 16) if tiny else (128, 3, 64)
+    kd = jax.random.split(jax.random.PRNGKey(7), 10)
+    mem = (jax.random.uniform(kd[0], (dc, dn)) < 0.8).astype(jnp.float32)
+    act = mem * (jax.random.uniform(kd[1], (dc, dn)) < 0.7)
+    end_b = (jax.random.uniform(kd[2], (dc, dn)) < 0.5).astype(jnp.float32)
+    agg = jax.random.normal(kd[3], (dc, 8), jnp.float32)
+    dims = [11, dh, dh, 10]
+    params = [{"w": jax.random.normal(kd[4 + 2 * i],
+                                      (dims[i], dims[i + 1])) * 0.3,
+               "b": jax.random.normal(kd[5 + 2 * i], (dims[i + 1],)) * 0.1}
+              for i in range(3)]
+    allowed = jnp.ones((dn, 10), jnp.float32)
+    acc_table = jnp.asarray(dynamics.accuracies(np.arange(10)),
+                            jnp.float32)
+    head_kw = dict(threshold=85.0, topk=3)
+    us_k = _time(ops.dqn_head, act, mem, end_b, agg, params, allowed,
+                 acc_table, impl="pallas", bc=dc, **head_kw)
+    us_r = _time(ops.dqn_head, act, mem, end_b, agg, params, allowed,
+                 acc_table, impl="ref", **head_kw)
+    prof = profile_kernel(ops.dqn_head, act, mem, end_b, agg, params,
+                          allowed, acc_table, impl="ref",
+                          name=f"dqn_head_{dc}_ref", **head_kw)
+    emit(f"kernel_dqn_head_{dc}", us_k,
+         f"ref{us_r:.0f}us intensity{prof['arithmetic_intensity']:.2f}_"
+         f"{prof['dominant']}")
+    out["dqn_head"] = {"us_pallas_interpret": us_k, "us_ref": us_r,
+                       "profile": prof}
+
     save_json("bench_kernels", out)
     return out
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale RL-kernel shapes (CI smoke)")
+    main(tiny=ap.parse_args().tiny)

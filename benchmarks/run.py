@@ -96,7 +96,17 @@ def main() -> None:
         save_json("BENCH_fleet", {
             "env_steps_per_s": tp.get("fleet_env_steps_per_s"),
             "rl_steps_per_s": tp.get("fleet_rl_steps_per_s"),
+            "rl_fused_tabular_steps_per_s":
+                tp.get("rl_fused_tabular_steps_per_s"),
+            "rl_unfused_tabular_steps_per_s":
+                tp.get("rl_unfused_tabular_steps_per_s"),
+            "rl_fused_tabular_speedup_x":
+                tp.get("rl_fused_tabular_speedup_x"),
             "dqn_rl_steps_per_s": dqn.get("dqn_rl_steps_per_s"),
+            "rl_fused_dqn_steps_per_s": dqn.get("rl_fused_dqn_steps_per_s"),
+            "rl_unfused_dqn_steps_per_s":
+                dqn.get("rl_unfused_dqn_steps_per_s"),
+            "rl_fused_dqn_speedup_x": dqn.get("rl_fused_dqn_speedup_x"),
             "converged_cells_per_s": tp.get("train_converged_cells_per_s"),
             "dqn_holdout_reward_ratio": dqn.get("holdout_reward_ratio"),
             "dqn_step_flatness": dqn.get("step_flatness"),

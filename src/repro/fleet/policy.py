@@ -83,6 +83,7 @@ from repro.fleet.population import (FleetTrainResult, adopt_mesh,
                                     train_against_oracle)
 from repro.fleet.replay import (replay_init, replay_push, replay_sample,
                                 replay_size)
+from repro.kernels import ops
 from repro.fleet.scenarios import FleetConfig, FleetScenario
 from repro.training.optimizer import (apply_updates, constant_lr_adamw,
                                       init_opt_state)
@@ -94,6 +95,29 @@ def state_dim(users: int) -> int:
     topology features (own-edge shared load, own-edge capacity, fleet
     cloud utilization)."""
     return 3 * users + 7
+
+
+def _topo_features(counts, scen: FleetScenario):
+    """The three (cells, 1) topology features — own-edge shared load,
+    own-edge capacity tier, fleet cloud utilization — shared by
+    ``encode_fleet_state`` (flat layout) and ``fused_head_features``
+    (direct per-user blocks) so the two paths cannot drift."""
+    inv = 1.0 / scen.users
+    counts_f = counts.astype(jnp.float32)
+    if scen.topo is None:
+        edge_load = counts_f[:, :1] * inv          # own jobs == shared jobs
+        cap = jnp.ones((scen.cells, 1), jnp.float32)
+        util = jnp.zeros((scen.cells, 1), jnp.float32)
+    else:
+        topo = scen.topo
+        tot = jax.ops.segment_sum(counts[:, 0], topo.cell_edge,
+                                  num_segments=topo.n_edges)
+        cap_cell = topo.edge_capacity[topo.cell_edge]
+        edge_load = (tot[topo.cell_edge] / cap_cell)[:, None] * inv
+        cap = cap_cell[:, None]
+        util = jnp.broadcast_to(counts_f[:, 1].sum() / topo.cloud_servers,
+                                (scen.cells, 1))
+    return edge_load.astype(jnp.float32), cap, util
 
 
 def encode_fleet_state(counts, scen: FleetScenario) -> jnp.ndarray:
@@ -120,19 +144,7 @@ def encode_fleet_state(counts, scen: FleetScenario) -> jnp.ndarray:
     users = scen.users
     inv = 1.0 / users
     counts_f = counts.astype(jnp.float32)
-    if scen.topo is None:
-        edge_load = counts_f[:, :1] * inv          # own jobs == shared jobs
-        cap = jnp.ones((scen.cells, 1), jnp.float32)
-        util = jnp.zeros((scen.cells, 1), jnp.float32)
-    else:
-        topo = scen.topo
-        tot = jax.ops.segment_sum(counts[:, 0], topo.cell_edge,
-                                  num_segments=topo.n_edges)
-        cap_cell = topo.edge_capacity[topo.cell_edge]
-        edge_load = (tot[topo.cell_edge] / cap_cell)[:, None] * inv
-        cap = cap_cell[:, None]
-        util = jnp.broadcast_to(counts_f[:, 1].sum() / topo.cloud_servers,
-                                (scen.cells, 1))
+    edge_load, cap, util = _topo_features(counts, scen)
     return jnp.concatenate([
         scen.active.astype(jnp.float32),
         scen.member.astype(jnp.float32),
@@ -179,6 +191,28 @@ def make_shared_per_user_q(users: int, allowed):
         return jnp.where(allowed[None], q.reshape(s.shape[0], n, -1), -1e30)
 
     return per_user_q
+
+
+def fused_head_features(counts, scen: FleetScenario):
+    """The fused head's inputs — per-user ``(active, member, end_b)``
+    blocks plus the (cells, 8) cell-aggregate rows — assembled directly
+    from the scenario, skipping the flat ``encode_fleet_state`` vector
+    that ``make_shared_per_user_q`` would only re-slice apart. The
+    arithmetic is the same op sequence, so the resulting feature rows
+    (and the head's Q values) are bit-identical to the legacy path."""
+    act = scen.active.astype(jnp.float32)
+    end = scen.end_b.astype(jnp.float32)
+    inv = 1.0 / scen.users
+    counts_f = counts.astype(jnp.float32)
+    edge_load, cap, util = _topo_features(counts, scen)
+    n_act = act.sum(-1, keepdims=True)
+    weak = (end * act).sum(-1, keepdims=True) / jnp.maximum(n_act, 1.0)
+    # n_act / users (not * inv): the exact float op the legacy head
+    # applies, so the rows stay bit-identical
+    agg = jnp.concatenate(
+        [scen.edge_b[:, None].astype(jnp.float32), n_act / scen.users,
+         counts_f * inv, weak, edge_load, cap, util], -1)  # (cells, 8)
+    return act, scen.member.astype(jnp.float32), end, agg
 
 
 class HoldoutEval(NamedTuple):
@@ -247,7 +281,8 @@ class FleetDQN:
                  cfg: Optional[FleetDQNConfig] = None,
                  actions: Optional[np.ndarray] = None, seed: int = 0,
                  reset_key=None, mesh=None, metrics: bool = True,
-                 n_windows: int = 0, window_len: int = 1):
+                 n_windows: int = 0, window_len: int = 1,
+                 impl: str = "pallas"):
         """``scen`` is a ``repro.fleet.api.ScenarioSource`` (reset with
         ``reset_key``, default ``PRNGKey(seed)``) — or, equivalently, a
         ``FleetScenario`` plus its ``FleetConfig`` (wrapped into a
@@ -268,7 +303,20 @@ class FleetDQN:
         back into training, so trajectories are bit-identical with it
         on or off — including with ``n_windows > 0``, which adds a
         per-window ring (``window_len`` steps per slot) to every
-        stream so ``metrics_summary()`` carries the learning curve."""
+        stream so ``metrics_summary()`` carries the learning curve.
+
+        ``impl`` selects the encode/act head implementation:
+        ``"pallas"`` (default) is the fused featurize + constraint-aware
+        greedy head (``kernels.dqn_head``) — per-user feature rows
+        assembled directly from the scenario, the shared MLP, the
+        allowed-action mask, and the top-k accuracy-ladder filter in one
+        fused pass (the compiled Pallas kernel on TPU, the
+        bit-equivalent fused-jnp formulation elsewhere; see
+        ``kernels.ops.resolve_rl_impl``). ``"xla"`` keeps the legacy
+        head; ``"pallas_interpret"`` forces the real kernel in
+        interpret mode (parity tests). The fused head exists only for
+        the weight-shared ``net='shared'`` encoder — ``net='cell'``
+        agents fall back to the legacy head regardless of ``impl``."""
         self.cfg = cfg or FleetDQNConfig()
         scen, self.source = resolve_source(scen, fleet_cfg, seed, reset_key)
         self.fleet_cfg = getattr(self.source, "cfg", None)
@@ -297,6 +345,13 @@ class FleetDQN:
         else:
             raise ValueError(f"unknown net form {self.cfg.net!r} "
                              "(expected 'shared' or 'cell')")
+        self.impl = impl
+        resolved = ops.resolve_rl_impl(impl, self.mesh)
+        if self.cfg.net != "shared":
+            resolved = "xla"        # fused head is shared-encoder only
+        self._op_impl = resolved
+        self._op_kwargs = (None if resolved == "xla"
+                           else ops.rl_op_kwargs(resolved))
         self.opt = init_opt_state(self.params)
         self.buffer = replay_init(self.cfg.replay_capacity, self.state_dim,
                                   action_shape=(users,))
@@ -337,6 +392,8 @@ class FleetDQN:
         per-user decisions, (cells,) joint action ids). With a QoS goal
         set, enumerates per-user top-k combos and filters by the known
         accuracy table (constraint-aware, like ``core.dqn``)."""
+        if self._op_impl != "xla":
+            return self._make_fused_greedy()
         users = self.spec.n_users
         per_user_q = self._per_user_q
         threshold = self.cfg.accuracy_threshold
@@ -377,6 +434,31 @@ class FleetDQN:
             q = per_user_q(params, encode_fleet_state(counts, scen))
             dec = (constrained(q, scen.member) if threshold
                    else q.argmax(-1)).astype(jnp.int32)
+            return dec, (dec * powers[None, :]).sum(-1)
+
+        return greedy
+
+    def _make_fused_greedy(self):
+        """The fused encode/act head: one ``kernels.ops.dqn_head`` call
+        replaces encode_fleet_state -> per_user_q -> top-k constraint
+        filter. Same (dec, joint id) contract as the legacy greedy."""
+        users = self.spec.n_users
+        threshold = float(self.cfg.accuracy_threshold)
+        k = min(self.cfg.topk, N_PER_USER_ACTIONS)
+        powers = jnp.asarray(
+            [N_PER_USER_ACTIONS ** (users - 1 - u) for u in range(users)],
+            jnp.int32)
+        allowed = jnp.asarray(self.allowed)
+        acc_table = jnp.asarray(
+            dynamics.accuracies(np.arange(N_PER_USER_ACTIONS)),
+            jnp.float32)
+        op_kwargs = self._op_kwargs
+
+        def greedy(params, counts, scen):
+            act, mem, end, agg = fused_head_features(counts, scen)
+            dec, _ = ops.dqn_head(act, mem, end, agg, params, allowed,
+                                  acc_table, threshold=threshold, topk=k,
+                                  **op_kwargs)
             return dec, (dec * powers[None, :]).sum(-1)
 
         return greedy

@@ -37,6 +37,8 @@ import numpy as np
 from repro.core.spaces import SpaceSpec, restricted_actions
 from repro.fleet import dynamics, topology
 from repro.fleet.scenarios import FleetConfig, FleetScenario
+from repro.kernels import ops
+from repro.kernels.ref import first_argmax_ref
 from repro.obs.metrics import MetricDef, MetricsAccumulator
 
 
@@ -247,7 +249,8 @@ class FleetQLearning:
                  cfg: Optional[FleetQConfig] = None,
                  actions: Optional[np.ndarray] = None, seed: int = 0,
                  reset_key=None, mesh=None, metrics: bool = True,
-                 n_windows: int = 0, window_len: int = 1):
+                 n_windows: int = 0, window_len: int = 1,
+                 impl: str = "pallas"):
         """``scen`` is a ``repro.fleet.api.ScenarioSource`` (reset with
         ``reset_key``, default ``PRNGKey(seed)``) — or, equivalently, a
         ``FleetScenario`` plus its ``FleetConfig`` (wrapped into a
@@ -266,11 +269,26 @@ class FleetQLearning:
         so trajectories are bit-identical with it on or off —
         including with ``n_windows > 0``, which adds a per-window ring
         (``window_len`` steps per slot) to every stream so
-        ``metrics_summary()`` carries the learning curve."""
+        ``metrics_summary()`` carries the learning curve.
+
+        ``impl`` selects the hot-path implementation: ``"pallas"``
+        (default) is the fused act+update pair — one Q-row gather
+        shared by the TD max and the next step's greedy, which the scan
+        then carries instead of re-gathering (the compiled Pallas
+        kernel on TPU, the bit-equivalent fused-jnp formulation
+        elsewhere; see ``kernels.ops.resolve_rl_impl``). ``"xla"`` is
+        the legacy unfused step (separate gather/argmax/scatter HLOs),
+        kept as the reference and the ``rl_unfused_*`` benchmark
+        baseline. ``"pallas_interpret"`` forces the real kernel in
+        interpret mode (parity tests; far too slow for training)."""
         self.cfg = cfg or FleetQConfig()
         scen, self.source = resolve_source(scen, fleet_cfg, seed, reset_key)
         self.fleet_cfg = getattr(self.source, "cfg", None)
         self.mesh, scen = adopt_mesh(mesh, self.source, scen)
+        self.impl = impl
+        self._op_impl = ops.resolve_rl_impl(impl, self.mesh)
+        self._op_kwargs = (None if self._op_impl == "xla"
+                           else ops.rl_op_kwargs(self._op_impl))
         self.spec = SpaceSpec(scen.users)
         self.actions = np.asarray(actions if actions is not None
                                   else default_actions(self.spec))
@@ -316,7 +334,61 @@ class FleetQLearning:
             s = s * self._link_states + packed
         return s
 
+    def _explore(self, greedy, eps, k_exp):
+        """Shared eps-greedy action draw: one uniform drives both the
+        explore decision and, conditioned on u < eps, the (still
+        uniform) random action u/eps — identical RNG consumption on the
+        fused and unfused paths, so trajectories match across impls."""
+        n_actions = self.n_actions
+        u = jax.random.uniform(k_exp, greedy.shape)
+        rand = jnp.minimum((u / jnp.maximum(eps, 1e-9)
+                            * n_actions).astype(jnp.int32),
+                           n_actions - 1)
+        return jnp.where(u < eps, rand, greedy)
+
+    def _make_fused_core(self):
+        """env step + fused TD update from a precomputed ``(s, greedy)``
+        pair — the body shared by the fused single-step and the fused
+        scan (which carries ``greedy2`` instead of re-gathering the
+        ``s2`` Q-row next step). Splits the key exactly like the legacy
+        step, so fused and unfused trajectories use identical RNG."""
+        cfg, pu = self.cfg, self.pu_table
+        advance = self.source.step
+        op_kwargs = self._op_kwargs
+
+        def core(q, mets, counts, scen, eps, key, s, greedy):
+            k_exp, k_noise, k_scen = jax.random.split(key, 3)
+            a = self._explore(greedy, eps, k_exp)              # (cells,)
+            per_user = pu[a]                                   # (cells, N)
+            mean_ms, acc, counts2 = simulate_responses(k_noise, scen,
+                                                       per_user, cfg.noise)
+            r = dynamics.reward(mean_ms, acc, cfg.accuracy_threshold,
+                                xp=jnp)
+            scen2, _ = advance(k_scen, scen)
+            s2 = self._state_index(counts2, scen2)
+            q, greedy2, td = ops.fused_tabular_update(
+                q, s, a, r, s2, alpha=cfg.alpha, gamma=cfg.gamma,
+                **op_kwargs)
+            if mets is not None:   # trace-time constant, no host sync
+                mets = mets.update({"reward": r, "mean_ms": mean_ms,
+                                    "td_abs": jnp.abs(td), "epsilon": eps})
+            info = {"mean_ms": mean_ms, "mean_acc": acc, "reward": r}
+            return q, mets, counts2, scen2, greedy2, info
+
+        return core
+
     def _make_step(self):
+        if self._op_impl != "xla":
+            core = self._make_fused_core()
+
+            def step(q, mets, counts, scen, eps, key):
+                s = self._state_index(counts, scen)
+                greedy = first_argmax_ref(q[jnp.arange(q.shape[0]), s])
+                q, mets, counts2, scen2, _, info = core(
+                    q, mets, counts, scen, eps, key, s, greedy)
+                return q, mets, counts2, scen2, info
+
+            return step
         cfg, pu = self.cfg, self.pu_table
         advance = self.source.step          # jit-pure ScenarioSource step
         n_actions = self.n_actions
@@ -355,9 +427,35 @@ class FleetQLearning:
 
     def _make_run(self):
         """n environment steps for the whole fleet in ONE jitted lax.scan
-        call (amortizes dispatch; donation keeps the table in place)."""
-        step = self._make_step()
+        call (amortizes dispatch; donation keeps the table in place).
+        The fused path carries each step's ``greedy2`` through the scan
+        — the act-side Q-row gather+argmax happens once, in the fused
+        update of the PREVIOUS step, instead of once per step."""
         decay, eps_min = self.cfg.eps_decay, self.cfg.eps_min
+        if self._op_impl != "xla":
+            core = self._make_fused_core()
+
+            def run(q, mets, counts, scen, eps, key, n):
+                def body(carry, _):
+                    q, mets, counts, scen, greedy, eps, key = carry
+                    key, k = jax.random.split(key)
+                    s = self._state_index(counts, scen)
+                    q, mets, counts, scen, greedy, info = core(
+                        q, mets, counts, scen, eps, k, s, greedy)
+                    eps = jnp.maximum(eps_min, eps * (1.0 - decay))
+                    return ((q, mets, counts, scen, greedy, eps, key),
+                            (info["mean_ms"].mean(),
+                             info["mean_acc"].mean()))
+                s0 = self._state_index(counts, scen)
+                greedy0 = first_argmax_ref(q[jnp.arange(q.shape[0]), s0])
+                carry, (ms, acc) = jax.lax.scan(
+                    body, (q, mets, counts, scen, greedy0, eps, key),
+                    None, length=n)
+                q, mets, counts, scen, _, eps, key = carry
+                return (q, mets, counts, scen, eps, key), ms, acc
+
+            return run
+        step = self._make_step()
 
         def run(q, mets, counts, scen, eps, key, n):
             def body(carry, _):
@@ -408,7 +506,9 @@ class FleetQLearning:
 
         def greedy(q, counts, scen):
             s = self._state_index(counts, scen)
-            a = q[jnp.arange(q.shape[0]), s].argmax(-1)
+            # first_argmax_ref == jnp.argmax (first-index tie-break),
+            # ~2x faster on CPU XLA; shared with the fused hot path
+            a = first_argmax_ref(q[jnp.arange(q.shape[0]), s])
             return pu[a], a
 
         return greedy

@@ -40,6 +40,18 @@ rules) over a 1-D ``('fleet',)`` mesh:
   slot blocks (``shard_replay``), and the mini-batch loss mean becomes
   the partitioner's cross-device grad reduction — standard
   replicate-the-policy / shard-the-population data parallelism.
+* **Fused RL ops under the mesh** — the agents' default
+  ``impl='pallas'`` hot path (ISSUE-10) gates itself here: GSPMD
+  cannot partition a ``pallas_call``, so
+  ``kernels.ops.resolve_rl_impl`` resolves ``'pallas'`` to the fused
+  *jnp* formulation whenever a mesh is attached. That formulation is
+  per-cell elementwise plus reduces along the (replicated) action
+  axis — the same op classes as the legacy step — so sharded fused
+  training stays bit-identical to single-device fused AND to the
+  legacy unfused path (``tests/test_fleet_shard.py::
+  test_fused_impl_sharded_training_bit_parity``). Running the compiled
+  kernel per shard via ``shard_map`` is the open follow-up; it needs a
+  TPU mesh to be worth wiring.
 
 CPU-testable: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 forces an 8-device host platform (no accelerator needed); with a

@@ -1,0 +1,150 @@
+"""Fused featurize + constraint-aware greedy head Pallas TPU kernel.
+
+``FleetDQN``'s act path materializes the flat ``encode_fleet_state``
+vector, re-slices it back into per-user rows, runs the shared MLP, and
+— with a QoS goal — gathers ``(cells, topk^N, N)`` candidate tensors to
+filter the per-user top-k combinations by the accuracy ladder. This
+kernel fuses the whole head per fleet block: each grid program
+assembles the ``(BC * N, 11)`` per-user feature matrix directly from
+the ``active``/``member``/``end_b`` blocks plus the 8-wide cell
+aggregates, keeps the three MLP weight matrices resident in VMEM
+across the block, masks with the allowed-action table, and resolves
+the constraint head in-register — top-k as ``k`` (max, first-argmax,
+mask) reduce pairs, combo scoring via compile-time-static gathers of
+the ``(topk^N, N)`` combination table, accuracy lookup as a one-hot
+contraction against the ladder — emitting only the ``(BC, N)`` greedy
+decisions and the masked head values.
+
+Combos with a masked (NEG_INF) member entry are culled, infeasible
+combos are culled, and a cell with no feasible combo falls back to the
+plain per-user argmax — bit-identical decision semantics to
+``ref.dqn_head_ref`` (the PR-2 constraint-leak fix, re-pinned here).
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _first_argmax(x, iota):
+    """First-index argmax over the last axis (jnp.argmax tie-break)."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    k = x.shape[-1]
+    return jnp.min(jnp.where(x == m, iota, k), axis=-1).astype(jnp.int32)
+
+
+def _kernel(act_ref, mem_ref, end_ref, agg_ref, w1_ref, b1_ref, w2_ref,
+            b2_ref, w3_ref, b3_ref, mask_ref, acc_ref, combo_ref, dec_ref,
+            q_ref, *, bc: int, users: int, threshold: float, topk: int):
+    n = users
+    act = act_ref[...]                                    # (BC, N)
+    agg = agg_ref[...]                                    # (BC, 8)
+    feats = jnp.concatenate(
+        [act[..., None], mem_ref[...][..., None], end_ref[...][..., None],
+         jnp.broadcast_to(agg[:, None, :], (bc, n, agg.shape[-1]))], -1)
+    x = feats.reshape(bc * n, feats.shape[-1])
+    h = jnp.maximum(jnp.dot(x, w1_ref[...]) + b1_ref[...], 0.0)
+    h = jnp.maximum(jnp.dot(h, w2_ref[...]) + b2_ref[...], 0.0)
+    q = jnp.dot(h, w3_ref[...]) + b3_ref[...]
+    n_act = q.shape[-1]
+    q = jnp.where(mask_ref[...][None] > 0.5, q.reshape(bc, n, n_act),
+                  NEG_INF)                                # (BC, N, A)
+    q_ref[...] = q
+    iota_a = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_act), 2)
+    plain = _first_argmax(q, iota_a)                      # (BC, N)
+    if not threshold:
+        dec_ref[...] = plain
+        return
+    # --- stable top-k: k rounds of (max, first-argmax, mask-out) ------
+    vals, idx, cur = [], [], q
+    for _ in range(topk):
+        i = _first_argmax(cur, iota_a)
+        hit = iota_a == i[..., None]
+        vals.append(jnp.sum(jnp.where(hit, cur, 0.0), -1)
+                    + jnp.where(jnp.all(~hit, -1), NEG_INF, 0.0))
+        idx.append(i)
+        cur = jnp.where(hit, NEG_INF, cur)
+    vals = jnp.stack(vals, -1)                            # (BC, N, k)
+    idx = jnp.stack(idx, -1)
+    # accuracy ladder lookup as a one-hot contraction (no gathers)
+    acc = acc_ref[...]                                    # (1, A)
+    onehot = idx[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, 1, n_act), 3)                   # (BC, N, k, A)
+    acc_k = jnp.sum(jnp.where(onehot, acc[None, None], 0.0), -1)
+    # --- combo scoring over the (topk^N, N) table ---------------------
+    # Per-user column gathers of the combos ref, expressed as one-hot
+    # contractions against the candidate axis (Pallas rejects captured
+    # numpy index constants, and gathers don't vectorize anyway).
+    comb = combo_ref[...]                                 # (Kc, N) int32
+    n_combo = comb.shape[0]
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, 1, topk), 2)
+    mem = mem_ref[...] > 0.5
+    nm = jnp.maximum(jnp.sum(mem.astype(q.dtype), -1), 1.0)[:, None]
+    score = jnp.zeros((bc, n_combo), q.dtype)
+    macc_sum = jnp.zeros((bc, n_combo), q.dtype)
+    invalid = jnp.zeros((bc, n_combo), jnp.bool_)
+    sel_idx = []
+    for u in range(n):
+        oh_u = comb[:, u][None, :, None] == iota_k        # (1, Kc, k)
+        v_u = jnp.sum(jnp.where(oh_u, vals[:, u][:, None, :], 0.0), -1)
+        a_u = jnp.sum(jnp.where(oh_u, acc_k[:, u][:, None, :], 0.0), -1)
+        i_u = jnp.sum(jnp.where(oh_u, idx[:, u][:, None, :], 0), -1)
+        m_u = mem[:, u:u + 1]
+        score = score + jnp.where(m_u, v_u, 0.0)
+        macc_sum = macc_sum + jnp.where(m_u, a_u, 0.0)
+        invalid = invalid | ((v_u < -1e29) & m_u)
+        sel_idx.append(i_u)                     # (BC, Kc) candidate ids
+    macc = jnp.where(jnp.any(mem, -1, keepdims=True), macc_sum / nm,
+                     100.0)
+    feas = macc >= threshold - 1e-9             # dynamics.feasible
+    score = jnp.where(feas & ~invalid, score, -jnp.inf)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (1, n_combo), 1)
+    j = _first_argmax(score, iota_c)                      # (BC,)
+    pick = iota_c == j[:, None]                           # (BC, Kc)
+    best = jnp.stack(
+        [jnp.sum(jnp.where(pick, i_u, 0), -1) for i_u in sel_idx], -1)
+    has_feasible = jnp.isfinite(jnp.max(score, -1))
+    dec_ref[...] = jnp.where(has_feasible[:, None], best, plain)
+
+
+def dqn_head_kernel(active, member, end_b, agg, w1, b1, w2, b2, w3, b3,
+                    allowed, acc_table, *, threshold: float, topk: int,
+                    bc: int = 128, interpret: bool = True):
+    """active/member/end_b: (cells, N) f32, cells a multiple of ``bc``;
+    agg: (cells, 8) f32; w*/b*: the 3-layer shared MLP (biases shaped
+    (1, width)); allowed: (N, A) f32 0/1 mask; acc_table: (1, A) f32.
+    Returns ``(dec, q)``: (cells, N) int32 and (cells, N, A) f32;
+    semantics of ``ref.dqn_head_ref``."""
+    cells, users = active.shape
+    n_act = w3.shape[1]
+    grid = (cells // bc,)
+    combos = jnp.asarray(
+        list(itertools.product(range(topk), repeat=users)), jnp.int32)
+    kernel = functools.partial(_kernel, bc=bc, users=users,
+                               threshold=threshold, topk=topk)
+    user_spec = pl.BlockSpec((bc, users), lambda i: (i, 0))
+    full = [pl.BlockSpec(arr.shape, lambda i: (0,) * arr.ndim)
+            for arr in (w1, b1, w2, b2, w3, b3, allowed, acc_table,
+                        combos)]
+    dec, q = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[user_spec, user_spec, user_spec,
+                  pl.BlockSpec((bc, agg.shape[1]), lambda i: (i, 0)),
+                  *full],
+        out_specs=[user_spec,
+                   pl.BlockSpec((bc, users, n_act), lambda i: (i, 0, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((cells, users), jnp.int32),
+            jax.ShapeDtypeStruct((cells, users, n_act), jnp.float32),
+        ],
+        interpret=interpret,
+    )(active, member, end_b, agg, w1, b1, w2, b2, w3, b3, allowed,
+      acc_table, combos)
+    return dec, q

@@ -14,9 +14,11 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.dqn_head import dqn_head_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.int8_matmul import int8_matmul_kernel
 from repro.kernels.selective_scan import selective_scan_kernel
+from repro.kernels.tabular_rl import tabular_rl_kernel
 
 NEG_INF = -1e30
 
@@ -130,3 +132,93 @@ def selective_scan(u, dt, A, B, C, D, *, impl: str = "pallas", bd: int = 256,
     y, h = selective_scan_kernel(u_, dt_, A_, B, C, D_, bd=bd,
                                  interpret=interpret)
     return y[:, :, :di], h[:, :di]
+
+
+def resolve_rl_impl(impl: str, mesh=None) -> str:
+    """Resolve a fleet agent's ``impl`` request to an executable path.
+
+    ``"xla"`` is the legacy unfused step, untouched. ``"pallas"`` is
+    the fused hot path and resolves by capability: the compiled kernel
+    needs a TPU backend, and ``pallas_call`` cannot be partitioned by
+    GSPMD, so under a device mesh (``fleet.shard``) the fused-jnp
+    reference formulation runs instead — it is per-cell elementwise +
+    batched gather/scatter + reduces along the unsharded action axis,
+    so it stays bit-identical sharded-vs-single-device (the discipline
+    ``tests/test_fleet_shard.py`` pins). On non-TPU hosts the same
+    reference formulation IS the fused win: one row-gather shared by
+    act and update, and the two-reduce ``first_argmax_ref``.
+    ``"pallas_interpret"`` forces the real kernel in interpret mode
+    (CPU CI parity runs; far too slow for production loops).
+    """
+    if impl in ("xla", "ref", "pallas_interpret"):
+        return impl
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}; expected 'pallas', "
+                         "'xla', 'ref', or 'pallas_interpret'")
+    if mesh is not None:
+        return "ref"
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "ref"
+
+
+def rl_op_kwargs(resolved: str) -> dict:
+    """kwargs for the fused ops matching a ``resolve_rl_impl`` result."""
+    if resolved == "ref":
+        return {"impl": "ref"}
+    if resolved == "pallas":
+        return {"impl": "pallas", "interpret": False}
+    if resolved == "pallas_interpret":
+        return {"impl": "pallas", "interpret": True}
+    raise ValueError(f"no fused op path for resolved impl {resolved!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "gamma", "impl",
+                                             "bc", "interpret"))
+def fused_tabular_update(q, s, a, r, s2, *, alpha: float, gamma: float,
+                         impl: str = "ref", bc: int = 8,
+                         interpret: bool = True):
+    """Fused tabular act+update: q (cells,S,K) f32, s/a/s2 (cells,)
+    int32, r (cells,) f32 -> (q_new, greedy2, td); see
+    ``ref.fused_tabular_ref``."""
+    if impl == "ref":
+        return ref.fused_tabular_ref(q, s, a, r, s2, alpha=alpha,
+                                     gamma=gamma)
+    cells = q.shape[0]
+    q_, _ = _pad_to(q, 0, bc)
+    cols = [_pad_to(x[:, None], 0, bc)[0] for x in (s, a, r, s2)]
+    q_new, greedy2, td = tabular_rl_kernel(
+        q_, *cols, alpha=alpha, gamma=gamma, bc=bc, interpret=interpret)
+    return q_new[:cells], greedy2[:cells, 0], td[:cells, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "topk", "impl",
+                                             "bc", "interpret"))
+def dqn_head(active, member, end_b, agg, params, allowed, acc_table, *,
+             threshold: float, topk: int, impl: str = "ref",
+             bc: int = 128, interpret: bool = True):
+    """Fused featurize + constraint-aware greedy head.
+
+    active/member/end_b: (cells, N) f32; agg: (cells, 8) f32 cell
+    aggregates; params: the 3-layer shared-net param list
+    (``[{"w", "b"}] * 3``); allowed: (N, A) bool allowed-action mask;
+    acc_table: (A,) f32 accuracy ladder. Returns ``(dec, q)``; see
+    ``ref.dqn_head_ref``.
+    """
+    (w1, b1), (w2, b2), (w3, b3) = [(p["w"], p["b"].reshape(1, -1))
+                                    for p in params]
+    allowed_f = jnp.asarray(allowed).astype(jnp.float32)
+    if impl == "ref":
+        return ref.dqn_head_ref(active, member, end_b, agg, w1, b1, w2,
+                                b2, w3, b3, allowed_f, acc_table,
+                                threshold=threshold, topk=topk)
+    cells = active.shape[0]
+    act_, _ = _pad_to(active, 0, bc)
+    mem_, _ = _pad_to(member, 0, bc)
+    end_, _ = _pad_to(end_b, 0, bc)
+    agg_, _ = _pad_to(agg, 0, bc)
+    dec, q = dqn_head_kernel(act_, mem_, end_, agg_, w1, b1, w2, b2, w3,
+                             b3, allowed_f, acc_table[None, :],
+                             threshold=threshold, topk=topk, bc=bc,
+                             interpret=interpret)
+    return dec[:cells], q[:cells]

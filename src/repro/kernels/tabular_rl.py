@@ -1,0 +1,83 @@
+"""Fused tabular-RL act+update Pallas TPU kernel.
+
+``FleetQLearning``'s per-cell hot path is three HLOs round-tripping the
+same two Q-table rows through HBM: gather ``q[c, s2]`` for the TD max,
+gather/scatter ``q[c, s, a]`` for the update, then — on the NEXT step —
+gather ``q[c, s2]`` again for the greedy argmax (``s2`` is exactly the
+next step's state index). This kernel fuses the act+update pair:
+blocking over the fleet axis, each grid program stages a ``(BC, S, K)``
+slab of the Q-table into VMEM, and for every cell in the block reads
+row ``s`` and row ``s2`` ONCE, computes the TD error, writes the
+updated ``(s, a)`` entry in place (``input_output_aliases`` keeps the
+table buffer donated), and emits the next step's greedy action from
+the post-update ``s2`` row — so the scan carries ``greedy`` instead of
+re-gathering the row, and Q-table rows never leave VMEM between the
+act and the update that consumed them.
+
+Argmax is the first-index tie-break of ``jnp.argmax``, computed as a
+(max, masked index-min) reduce pair — the same trick
+``ref.first_argmax_ref`` uses, vectorized on the VPU lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, s_ref, a_ref, r_ref, s2_ref, q_out_ref, g_ref, td_ref,
+            *, bc: int, alpha: float, gamma: float, n_actions: int):
+    # q: (BC, S, K); s/a/r/s2 and g/td: (BC, 1)
+    q_out_ref[...] = q_ref[...]          # no-op under aliasing; exact copy
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_actions), 1)
+
+    def cell(c, _):
+        s_c, a_c = s_ref[c, 0], a_ref[c, 0]
+        s2_c, r_c = s2_ref[c, 0], r_ref[c, 0]
+        row_s = pl.load(q_ref, (c, pl.ds(s_c, 1), slice(None)))   # (1, K)
+        row_2 = pl.load(q_ref, (c, pl.ds(s2_c, 1), slice(None)))  # (1, K)
+        onehot = iota == a_c
+        q_sa = jnp.sum(jnp.where(onehot, row_s, 0.0))
+        td = r_c + gamma * jnp.max(row_2) - q_sa
+        row_s_new = row_s + jnp.where(onehot, alpha * td, 0.0)
+        pl.store(q_out_ref, (c, pl.ds(s_c, 1), slice(None)), row_s_new)
+        # next step's greedy on the POST-update s2 row (when s2 == s the
+        # freshly written entry participates)
+        row_2_new = jnp.where(s2_c == s_c, row_s_new, row_2)
+        m2 = jnp.max(row_2_new)
+        g = jnp.min(jnp.where(row_2_new == m2, iota, n_actions))
+        g_ref[c, 0] = g.astype(jnp.int32)
+        td_ref[c, 0] = td
+        return _
+
+    jax.lax.fori_loop(0, bc, cell, 0)
+
+
+def tabular_rl_kernel(q, s, a, r, s2, *, alpha: float, gamma: float,
+                      bc: int = 8, interpret: bool = True):
+    """q: (cells, S, K) f32; s/a/r/s2: (cells, 1) int32/f32, cells a
+    multiple of ``bc``. Returns ``(q_new, greedy2, td)`` with greedy2/td
+    shaped (cells, 1); semantics of ``ref.fused_tabular_ref``."""
+    cells, n_states, n_actions = q.shape
+    grid = (cells // bc,)
+    kernel = functools.partial(_kernel, bc=bc, alpha=alpha, gamma=gamma,
+                               n_actions=n_actions)
+    scalar_spec = pl.BlockSpec((bc, 1), lambda i: (i, 0))
+    q_spec = pl.BlockSpec((bc, n_states, n_actions), lambda i: (i, 0, 0))
+    q_new, greedy2, td = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, scalar_spec, scalar_spec, scalar_spec,
+                  scalar_spec],
+        out_specs=[q_spec, scalar_spec, scalar_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((cells, 1), jnp.int32),
+            jax.ShapeDtypeStruct((cells, 1), jnp.float32),
+        ],
+        input_output_aliases={0: 0},     # update the Q slab in place
+        interpret=interpret,
+    )(q, s, a, r, s2)
+    return q_new, greedy2, td

@@ -218,9 +218,13 @@ def _dqn_stage_fns(agent):
     def update(params, opt, s, a, r, s2):
         return train_step(params, opt, s, a, r, s2)
 
+    # the act closure above already routes through the agent's fused
+    # head when one is active — only the reported stage name changes
+    act_name = ("encode_act" if getattr(agent, "_op_impl", "xla") == "xla"
+                else "fused_encode_act")
     return {
-        "encode_act": (encode_act,
-                       (agent.params, counts, scen, agent.eps, key)),
+        act_name: (encode_act,
+                   (agent.params, counts, scen, agent.eps, key)),
         "env_step": (lambda key, scen, a: env_step(key, scen, a),
                      (key, scen, a)),
         "replay": (replay, (key, buf, s, a, r, s)),
@@ -229,9 +233,15 @@ def _dqn_stage_fns(agent):
 
 
 def _tabular_stage_fns(agent):
-    """(name -> (fn, args)) decomposition of ``FleetQLearning``'s step:
-    eps-greedy act (state index + gather + argmax), env step, TD
-    scatter-update."""
+    """(name -> (fn, args)) decomposition of ``FleetQLearning``'s step.
+
+    Legacy (``impl='xla'``) stages: eps-greedy act (state index +
+    gather + argmax), env step, TD scatter-update. Fused agents
+    replace the last with ``fused_update_act`` — the single
+    ``kernels.ops.fused_tabular_update`` call that covers the TD
+    update AND the next step's act-side gather/argmax (the scan
+    carries its ``greedy2``), so ``encode_act`` shrinks to the state
+    index + exploration draw."""
     from repro.fleet.api import make_env_step
 
     cfg = agent.cfg
@@ -243,6 +253,31 @@ def _tabular_stage_fns(agent):
     scen, counts = agent.scen, agent.counts
     a0 = jnp.zeros((scen.cells,), jnp.int32)
     r = jnp.zeros((scen.cells,), jnp.float32)
+
+    if getattr(agent, "_op_impl", "xla") != "xla":
+        from repro.kernels import ops
+        s0 = jnp.zeros((scen.cells,), jnp.int32)
+        g0 = jnp.zeros((scen.cells,), jnp.int32)
+
+        def encode_act(counts, scen, greedy, eps, key):
+            s = agent._state_index(counts, scen)
+            a = agent._explore(greedy, eps, key)
+            return s, a, pu[a]
+
+        def fused_update_act(q, s, a, r, s2):
+            return ops.fused_tabular_update(
+                q, s, a, r, s2, alpha=cfg.alpha, gamma=cfg.gamma,
+                **agent._op_kwargs)
+
+        return {
+            "encode_act": (encode_act,
+                           (counts, scen, g0, agent.eps, key)),
+            "env_step": (lambda key, scen, a: env_step(key, scen, a),
+                         (key, scen, jnp.zeros((scen.cells, scen.users),
+                                               jnp.int32))),
+            "fused_update_act": (fused_update_act,
+                                 (agent.q, s0, a0, r, s0)),
+        }
 
     def encode_act(q, counts, scen, eps, key):
         cells = jnp.arange(q.shape[0])

@@ -142,6 +142,39 @@ def test_qlearning_training_bit_parity():
         assert b.q.sharding.spec[0] == "fleet"       # donation kept layout
 
 
+def test_fused_impl_sharded_training_bit_parity():
+    """ISSUE-10: the fused hot path under a mesh. ``impl='pallas'``
+    resolves to the fused-jnp formulation when a mesh is attached
+    (GSPMD cannot partition ``pallas_call``; see
+    ``kernels.ops.resolve_rl_impl``) — per-cell elementwise + reduces
+    along the unsharded action axis, so a sharded fused run is
+    bit-identical to the single-device fused run AND to the legacy
+    unfused step."""
+    from repro.kernels import ops
+    cfg = _full_cfg(8 * NDEV)
+    single = FleetQLearning(SyntheticSource(cfg), cfg=FleetQConfig(),
+                            seed=3, impl="pallas")
+    meshed = FleetQLearning(SyntheticSource(cfg), cfg=FleetQConfig(),
+                            seed=3, impl="pallas", mesh=_mesh())
+    legacy = FleetQLearning(SyntheticSource(cfg), cfg=FleetQConfig(),
+                            seed=3, impl="xla", mesh=_mesh())
+    assert ops.resolve_rl_impl("pallas", meshed.mesh) == "ref"
+    assert meshed._op_impl == "ref"
+    for ag in (single, meshed, legacy):
+        ag.run(40)
+    np.testing.assert_array_equal(np.asarray(single.q),
+                                  np.asarray(meshed.q))
+    np.testing.assert_array_equal(np.asarray(legacy.q),
+                                  np.asarray(meshed.q))
+    np.testing.assert_array_equal(np.asarray(single.counts),
+                                  np.asarray(meshed.counts))
+    np.testing.assert_array_equal(
+        np.asarray(single.greedy_decisions()),
+        np.asarray(meshed.greedy_decisions()))
+    if NDEV > 1:
+        assert meshed.q.sharding.spec[0] == "fleet"
+
+
 def test_metrics_accumulator_sharded_update_bit_parity():
     """Standalone obs satellite: the same jitted update on a placed
     accumulator (lane leaves sharded along the fleet axis, histograms

@@ -101,8 +101,9 @@ def test_stage_costs_dqn_stages_and_fractions():
                                                    batch_size=16))
     rep = stage_costs(agent, reps=2, spans=spans)
     assert rep["kind"] == "dqn"
-    assert set(rep["stages"]) == {"encode_act", "env_step", "replay",
-                                  "update"}
+    # default impl routes the act stage through the fused head
+    assert set(rep["stages"]) == {"fused_encode_act", "env_step",
+                                  "replay", "update"}
     for fr in ("flop_fracs", "byte_fracs", "wall_fracs"):
         assert sum(rep[fr].values()) == pytest.approx(1.0)
         assert all(v >= 0 for v in rep[fr].values())
@@ -117,10 +118,24 @@ def test_stage_costs_tabular_stages_and_fractions():
     agent = FleetQLearning(_source(), cfg=FleetQConfig())
     rep = stage_costs(agent, reps=2)
     assert rep["kind"] == "tabular"
-    assert set(rep["stages"]) == {"encode_act", "env_step", "update"}
+    # default impl: TD update + next-step act fused into one stage
+    assert set(rep["stages"]) == {"encode_act", "env_step",
+                                  "fused_update_act"}
     assert sum(rep["flop_fracs"].values()) == pytest.approx(1.0)
     assert rep["cells"] == 8 and rep["users"] == 2
     json.dumps(rep)
+
+
+def test_stage_costs_xla_impl_keeps_legacy_stage_names():
+    rep = stage_costs(FleetQLearning(_source(), cfg=FleetQConfig(),
+                                     impl="xla"), reps=1)
+    assert set(rep["stages"]) == {"encode_act", "env_step", "update"}
+    rep = stage_costs(FleetDQN(_source(),
+                               cfg=FleetDQNConfig(replay_capacity=256,
+                                                  batch_size=16),
+                               impl="xla"), reps=1)
+    assert set(rep["stages"]) == {"encode_act", "env_step", "replay",
+                                  "update"}
 
 
 def test_stage_flop_fractions_deterministic_across_recompiles():
@@ -170,6 +185,12 @@ def _bench_payload(**overrides):
         "trace_serving_gap_x": 7.0,
         "slo_attainment_measured": 0.9, "slo_attainment_predicted": 1.0,
         "p99_ms": 2000.0, "windowed_overhead_x": 1.0,
+        "rl_fused_tabular_steps_per_s": 8e5,
+        "rl_unfused_tabular_steps_per_s": 4e5,
+        "rl_fused_tabular_speedup_x": 2.0,
+        "rl_fused_dqn_steps_per_s": 9e4,
+        "rl_unfused_dqn_steps_per_s": 8e4,
+        "rl_fused_dqn_speedup_x": 1.15,
     }
     metrics.update(overrides)
     return attach_manifest(metrics)
@@ -217,6 +238,24 @@ def test_benchgate_degraded_slo_attainment_fails(tmp_path):
     # attainment at the floor still passes even if below baseline
     ok = _write(tmp_path / "ok.json", _bench_payload(
         slo_attainment_measured=0.55))
+    assert _gate(base, ok).returncode == 0
+
+
+def test_benchgate_fused_speedup_floor(tmp_path):
+    """ISSUE-10: a run whose fused/unfused ratio collapses below the
+    absolute floor exits 1 — fused regressing to parity with the legacy
+    path must fail the build even if raw throughput looks fine."""
+    base = _write(tmp_path / "base.json", _bench_payload())
+    bad = _write(tmp_path / "bad.json", _bench_payload(
+        rl_fused_tabular_speedup_x=1.1,   # below the 1.7 floor
+        rl_fused_dqn_speedup_x=0.9))      # fused slower than legacy
+    res = _gate(base, bad)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "2 regression(s)" in res.stdout
+    assert "rl_fused_tabular_speedup_x" in res.stdout
+    # at-floor still passes even below the baseline's recorded ratio
+    ok = _write(tmp_path / "ok.json", _bench_payload(
+        rl_fused_tabular_speedup_x=1.75, rl_fused_dqn_speedup_x=1.03))
     assert _gate(base, ok).returncode == 0
 
 

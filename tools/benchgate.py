@@ -70,6 +70,18 @@ RULES = {
     "bridge_throughput_rps":      ("higher", 0.50),
     "calibrated_gap_x":           ("ceiling", 1.5),
     "calibrated_dqn_holdout_reward_ratio": ("floor", 0.95),
+    # ISSUE 10 — fused RL hot path. Throughputs get the usual CI bands;
+    # the speedup ratios gate on absolute floors (fused/unfused on the
+    # same box in the same run, so runner speed divides out): the fused
+    # tabular act+update must hold >= 2x the legacy step (measured
+    # ~2.0-2.4x, floor at 1.7 for jitter) and the fused constrained DQN
+    # head must stay measurably ahead (~1.18x measured, floor 1.02).
+    "rl_fused_tabular_steps_per_s":  ("higher", 0.40),
+    "rl_unfused_tabular_steps_per_s": ("higher", 0.40),
+    "rl_fused_tabular_speedup_x":    ("floor", 1.7),
+    "rl_fused_dqn_steps_per_s":      ("higher", 0.40),
+    "rl_unfused_dqn_steps_per_s":    ("higher", 0.40),
+    "rl_fused_dqn_speedup_x":        ("floor", 1.02),
 }
 
 #: manifest fields that must match for numbers to be comparable
